@@ -1,0 +1,53 @@
+"""Fig. 6 + §V-E: neural-network workloads — MGB vs schedGPU [11], plus the
+128-job mixed NN experiment vs single-assignment.
+
+Paper claims: MGB over schedGPU = 1.4x (predict), 2.2x (generate), 3.1x
+(train), ~1.0x (detect, compute not saturated); 128-job mix completes 2.7x
+faster than SA with 32 workers.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import workloads as W
+
+BANDS = {"predict": (1.15, 1.7), "generate": (1.7, 2.7),
+         "train": (2.4, 3.8), "detect": (0.85, 1.25)}
+
+
+def run() -> dict:
+    n_dev = 4          # 4xV100 AWS system
+    workers = 8        # 8 homogeneous jobs, all queued
+    rows = {}
+    for kind in W.NN_KINDS:
+        jobs = W.nn_homogeneous(kind, 8)
+        sg = C.run_memonly(jobs, n_dev, workers)
+        mgb = C.run_mgb(jobs, n_dev, workers, alg=3)
+        rows[kind] = {
+            "schedgpu_throughput": sg.throughput,
+            "mgb_throughput": mgb.throughput,
+            "mgb_over_schedgpu": mgb.throughput / sg.throughput,
+        }
+    # 128-job random mix, 32 workers, vs SA
+    mix = W.nn_mix(3, 128)
+    sa = C.run_sa(mix, n_dev)
+    mgb = C.run_mgb(mix, n_dev, 32, alg=3)
+    mix_speedup = sa.makespan / mgb.makespan
+    out = {"rows": rows, "mix128_mgb_over_sa": mix_speedup,
+           "paper_claim": {"predict": 1.4, "generate": 2.2, "train": 3.1,
+                           "detect": 1.0, "mix128_over_sa": 2.7}}
+    print("Fig6 MGB over schedGPU (8 homogeneous NN jobs, 4 devices):")
+    for kind, r in rows.items():
+        print(f"  {kind:9s}: {r['mgb_over_schedgpu']:.2f}x")
+        lo, hi = BANDS[kind]
+        print(C.check(f"{kind} MGB/schedGPU", r["mgb_over_schedgpu"], lo, hi))
+    print(f"  128-job NN mix MGB/SA: {mix_speedup:.2f}x")
+    # our simulator has no host-side contention (the paper's 32
+    # workers share 32 real cores), so the mix speedup lands a bit
+    # above the paper's 2.7x
+    print(C.check("mix128 MGB/SA", mix_speedup, 2.0, 3.8))
+    C.save_json("fig6.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

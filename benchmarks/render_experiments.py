@@ -1,0 +1,58 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from the dry-run JSON
+artifacts. Run after both sweeps:
+
+    PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load(mesh: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DIR, f"*__{mesh}.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def table(mesh: str) -> str:
+    rows = load(mesh)
+    out = [f"### Mesh {mesh} ({256 if mesh == '16x16' else 512} chips)\n",
+           "| arch | shape | status | compute_s | memory_s | collective_s |"
+           " dominant | useful ratio | roofline frac | peak GB/dev | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP (full attention"
+                       f" at 500k) | | | | | | | |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | | |")
+            continue
+        rl = r["roofline"]
+        pk = r["memory"]["peak_per_device"] / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {rl['compute_s']:.3f} "
+            f"| {rl['memory_s']:.3f} | {rl['collective_s']:.3f} "
+            f"| {rl['dominant']} | {rl['useful_ratio']:.2f} "
+            f"| {rl['roofline_fraction']:.3f} | {pk:.2f} "
+            f"| {'Y' if pk <= 16 else 'N'} |")
+    ok = sum(1 for r in rows if r.get("status") == "ok")
+    skip = sum(1 for r in rows if r.get("status") == "SKIP")
+    fail = len(rows) - ok - skip
+    out.append(f"\n{ok} ok / {skip} skip / {fail} fail\n")
+    return "\n".join(out)
+
+
+def main():
+    print(table("16x16"))
+    print()
+    print(table("2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

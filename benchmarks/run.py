@@ -1,0 +1,41 @@
+"""Benchmark runner: one experiment per paper table/figure, printed summary,
+JSON artifacts under benchmarks/results/.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (
+    fig4_alg2_vs_alg3, fig5_throughput, fig6_nn_schedgpu, kernels_bench,
+    table2_crashes, table3_turnaround, table4_slowdown,
+)
+
+EXPERIMENTS = {
+    "fig4": fig4_alg2_vs_alg3.run,
+    "fig5": fig5_throughput.run,
+    "table2": table2_crashes.run,
+    "table3": table3_turnaround.run,
+    "table4": table4_slowdown.run,
+    "fig6": fig6_nn_schedgpu.run,
+    "kernels": kernels_bench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(EXPERIMENTS))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(EXPERIMENTS)
+    t0 = time.time()
+    for name in names:
+        print(f"\n=== {name} " + "=" * (70 - len(name)))
+        EXPERIMENTS[name]()
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s; "
+          f"artifacts in benchmarks/results/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps on the synthetic pipeline, with checkpointing + resume.
+
+This is the deliverable-(b) end-to-end example: real data pipeline ->
+sharded train step -> AdamW -> async checkpoints, the loss demonstrably
+decreasing. On a pod the same code runs the full configs (see
+repro.launch.train --full).
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300] [--resume]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.configs import registry
+from repro.launch import train as T
+
+# ~100M params: 2*V*d + L*(4*d^2 + 3*d*f) = 2*32000*640 + 12*(4*640^2 +
+# 3*640*2560) ≈ 41M + 12*6.6M ≈ 120M
+CONFIG_100M = ArchConfig(
+    name="lm-100m",
+    family="dense",
+    n_layers=12,
+    d_model=640,
+    n_heads=10,
+    n_kv_heads=5,
+    d_ff=2560,
+    vocab=32000,
+    mlp_act="silu_gated",
+    remat_policy="nothing",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    print(f"lm-100m: {CONFIG_100M.param_count() / 1e6:.0f}M params")
+    registry.ARCHS[CONFIG_100M.name] = CONFIG_100M  # selectable config
+    res = T.train(CONFIG_100M.name, steps=args.steps, batch=args.batch,
+                  seq=args.seq, reduced=False, ckpt_dir=args.ckpt_dir,
+                  ckpt_every=50, resume=args.resume, attn_impl="flash",
+                  log_every=20, lr=1e-3)
+    first, last = res["losses"][0], res["final_loss"]
+    print(f"loss {first:.3f} -> {last:.3f} over {res['steps']} steps "
+          f"({res['steps'] / res['wall_s']:.2f} steps/s on CPU)")
+    assert last < first, "loss must decrease"
+    print("train_100m OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""The paper's primary contribution: compiler-guided GPU-task scheduling.
+
+Pipeline (paper Fig. 2): task construction (taskgraph, Alg. 1) -> probes
+(probe: resource vectors from XLA compiled artifacts) -> lazy runtime (lazy:
+device-independent buffers) -> scheduler (scheduler.*: SA / CG / schedGPU
+baselines, MGB Alg. 2 + Alg. 3, slice-level) -> execution (executor: live
+worker pool; simulator: discrete-event engine for W1-W8-scale studies).
+"""
+from repro.core.task import Job, ResourceVector, Task, UnitTask  # noqa: F401
+from repro.core.taskgraph import build_gpu_tasks  # noqa: F401

@@ -1,0 +1,114 @@
+"""Lazy runtime: device-independent buffers with deferred binding.
+
+Paper §III-A2: statically-unbound memory ops are replaced by lazy ops that
+record into a per-buffer queue under a *pseudo-address*; just before a kernel
+launch, ``kernelLaunchPrepare`` replays the queues on the device the scheduler
+picked and patches the real addresses in.
+
+JAX analogue: arrays are device-bound at creation, so a task that pre-created
+its inputs could never be moved. ``LazyBuffer`` records (alloc / h2d / fill)
+ops against host-side state; ``bind(device)`` replays them via
+``jax.device_put`` onto the scheduler-chosen device. ``kernel_launch_prepare``
+binds every buffer of a task and returns the real arrays for the launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_pseudo_addr = itertools.count(0x1000)
+
+
+@dataclasses.dataclass
+class _Op:
+    kind: str                     # alloc | h2d | fill
+    payload: Any = None
+
+
+class LazyBuffer:
+    """A memory object with a pseudo-address and a recorded op queue."""
+
+    def __init__(self, name: str = ""):
+        self.pseudo = next(_pseudo_addr)
+        self.name = name or f"buf@{self.pseudo:#x}"
+        self.ops: List[_Op] = []
+        self.shape: Optional[Tuple[int, ...]] = None
+        self.dtype: Any = None
+        self.device: Optional[Any] = None
+        self._real: Optional[jax.Array] = None
+
+    # -- recorded (lazy) operations --------------------------------------
+    def alloc(self, shape: Sequence[int], dtype=jnp.float32) -> "LazyBuffer":
+        """lazyMalloc: record the allocation; nothing touches a device."""
+        self.shape, self.dtype = tuple(shape), jnp.dtype(dtype)
+        self.ops.append(_Op("alloc"))
+        return self
+
+    def h2d(self, host_array: np.ndarray) -> "LazyBuffer":
+        """lazy cudaMemcpyHostToDevice."""
+        if self.shape is None:
+            self.alloc(host_array.shape, host_array.dtype)
+        self.ops.append(_Op("h2d", np.asarray(host_array)))
+        return self
+
+    def fill(self, value) -> "LazyBuffer":
+        """lazy cudaMemset."""
+        self.ops.append(_Op("fill", value))
+        return self
+
+    @property
+    def nbytes(self) -> int:
+        if self.shape is None:
+            return 0
+        return int(np.prod(self.shape, dtype=np.int64)) * self.dtype.itemsize
+
+    # -- replay -----------------------------------------------------------
+    def bind(self, device) -> jax.Array:
+        """Replay the recorded queue on ``device`` and return the real array."""
+        if self._real is not None and self.device == device:
+            return self._real
+        assert self.shape is not None, f"{self.name}: bind before alloc"
+        arr: Optional[jax.Array] = None
+        for op in self.ops:
+            if op.kind == "alloc":
+                arr = None  # allocation is realised by the first write below
+            elif op.kind == "h2d":
+                arr = jax.device_put(op.payload.astype(self.dtype), device)
+            elif op.kind == "fill":
+                arr = jax.device_put(
+                    jnp.full(self.shape, op.payload, self.dtype), device)
+        if arr is None:  # bare alloc: zeros (deterministic, like cudaMalloc+memset)
+            arr = jax.device_put(jnp.zeros(self.shape, self.dtype), device)
+        self._real = arr
+        self.device = device
+        return arr
+
+    def free(self):
+        """cudaFree: drop the device reference (post-dominator of the task)."""
+        self._real = None
+        self.device = None
+
+    def d2h(self) -> np.ndarray:
+        assert self._real is not None, f"{self.name}: d2h before bind"
+        return np.asarray(self._real)
+
+    def __repr__(self):
+        return (f"LazyBuffer({self.name}, {self.shape}, {self.dtype}, "
+                f"bound={self._real is not None})")
+
+
+def kernel_launch_prepare(buffers: Dict[str, LazyBuffer], device
+                          ) -> Dict[str, jax.Array]:
+    """Paper's ``kernelLaunchPrepare``: replay every buffer queue on the
+    scheduler-chosen device, returning pseudo-address -> real array."""
+    return {name: buf.bind(device) for name, buf in buffers.items()}
+
+
+def free_all(buffers: Dict[str, LazyBuffer]) -> None:
+    for buf in buffers.values():
+        buf.free()

@@ -1,0 +1,8 @@
+from repro.core.scheduler.base import DeviceState, Scheduler  # noqa: F401
+from repro.core.scheduler.baselines import (  # noqa: F401
+    CGScheduler, MemOnlyScheduler, SAScheduler,
+)
+from repro.core.scheduler.mgb import (  # noqa: F401
+    MGBAlg2Scheduler, MGBAlg3Scheduler,
+)
+from repro.core.scheduler.slice import SliceScheduler  # noqa: F401

@@ -1,0 +1,108 @@
+"""Scheduler substrate: per-device state + the task_begin/task_end API.
+
+The paper's scheduler is a user-level daemon; probes talk to it over shared
+memory. Here it is an in-process object with the same two-call contract:
+
+    dev = sched.task_begin(task)   # None => no feasible device, caller waits
+    sched.task_end(task)           # frees the task's resources
+
+``DeviceState`` tracks free HBM and the aggregate core demand ("in-use warps")
+of resident tasks; death marking supports the fault-tolerance tests (a dead
+device is never selected and its residents re-enter the queue).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.task import Task
+
+# 16 GB v5e HBM per chip (the paper's P100/V100 also had 16 GB)
+DEFAULT_HBM = 16 * 1024**3
+
+
+@dataclasses.dataclass
+class DeviceState:
+    index: int
+    total_hbm: int = DEFAULT_HBM
+    used_hbm: int = 0
+    alive: bool = True
+    residents: Dict[int, Task] = dataclasses.field(default_factory=dict)
+
+    @property
+    def free_hbm(self) -> int:
+        return self.total_hbm - self.used_hbm
+
+    @property
+    def in_use_demand(self) -> float:
+        """Aggregate dominant-resource demand — the paper's 'active warps'."""
+        return sum(t.resources.demand for t in self.residents.values())
+
+    def demands(self) -> List[tuple]:
+        return [(t.resources.core_demand, t.resources.bw_demand)
+                for t in self.residents.values()]
+
+    def admit(self, task: Task) -> None:
+        self.used_hbm += task.resources.hbm_bytes
+        self.residents[task.uid] = task
+
+    def release(self, task: Task) -> None:
+        if task.uid in self.residents:
+            del self.residents[task.uid]
+            self.used_hbm -= task.resources.hbm_bytes
+
+    def oom(self) -> bool:
+        return self.used_hbm > self.total_hbm
+
+
+class Scheduler:
+    """Base scheduler: subclasses implement ``select_device``."""
+
+    name = "base"
+
+    def __init__(self, num_devices: int, hbm_per_device: int = DEFAULT_HBM):
+        self.devices = [DeviceState(i, total_hbm=hbm_per_device)
+                        for i in range(num_devices)]
+        self._lock = threading.Lock()
+        self.placements: List[tuple] = []  # (task_uid, device) audit log
+
+    # -- policy hook -------------------------------------------------------
+    def select_device(self, task: Task) -> Optional[DeviceState]:
+        raise NotImplementedError
+
+    # -- paper API -----------------------------------------------------------
+    def task_begin(self, task: Task) -> Optional[int]:
+        """Probe entry point: returns the device index or None (caller queues)."""
+        with self._lock:
+            dev = self.select_device(task)
+            if dev is None:
+                return None
+            dev.admit(task)
+            task.device = dev.index
+            self.placements.append((task.uid, dev.index))
+            return dev.index
+
+    def task_end(self, task: Task) -> None:
+        with self._lock:
+            if task.device is not None:
+                self.devices[task.device].release(task)
+
+    # -- fault tolerance -----------------------------------------------------
+    def mark_dead(self, device_index: int) -> List[Task]:
+        """Fail a device: evict residents (they re-enter the queue)."""
+        with self._lock:
+            dev = self.devices[device_index]
+            dev.alive = False
+            evicted = list(dev.residents.values())
+            for t in evicted:
+                dev.release(t)
+                t.device = None
+            return evicted
+
+    def revive(self, device_index: int) -> None:
+        with self._lock:
+            self.devices[device_index].alive = True
+
+    def alive_devices(self) -> List[DeviceState]:
+        return [d for d in self.devices if d.alive]

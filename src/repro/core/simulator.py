@@ -1,0 +1,268 @@
+"""Discrete-event simulator for batch job mixes under a scheduler.
+
+Reproduces the paper's evaluation protocol (§V-A): a queue full of jobs at
+t=0, a pool of workers that each dequeue a job, run its GPU tasks under the
+scheduler, and pull the next. Task progress follows the processor-sharing
+interference model (repro.core.interference): residents of an oversubscribed
+chip dilate by the total core demand.
+
+Crash semantics (paper Table II): a memory-oblivious scheduler (CG) may admit
+a task whose footprint exceeds the device's free HBM — the job then dies with
+OOM, exactly like a failed cudaMalloc. Memory-safe schedulers (SA, MGB,
+schedGPU) never trigger this path.
+
+The simulator is deterministic given (jobs, scheduler, workers) and is the
+engine behind benchmarks/fig4, fig5, table2, table3, table4, fig6.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import interference
+from repro.core.scheduler.base import Scheduler
+from repro.core.task import Job, Task
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    throughput: float              # completed jobs per second
+    completed: int
+    crashed: int
+    turnaround: Dict[str, float]   # per-job turnaround seconds
+    slowdowns: Dict[str, float]    # per-KERNEL execution dilation (Table IV)
+    dilations: Dict[str, float]    # per-task wall dilation incl. sharing
+    device_busy: List[float]       # per-device busy seconds
+    utilization: float             # mean busy fraction over makespan
+
+    @property
+    def mean_turnaround(self) -> float:
+        vals = list(self.turnaround.values())
+        return sum(vals) / len(vals) if vals else 0.0
+
+    @property
+    def mean_slowdown_pct(self) -> float:
+        vals = list(self.slowdowns.values())
+        return (sum(vals) / len(vals) - 1.0) * 100 if vals else 0.0
+
+
+@dataclasses.dataclass
+class _Running:
+    task: Task
+    job: "_JobState"
+    remaining: float       # seconds of solo work left
+    device: int
+    # integral of per-kernel overhead d(work): MPS interleaves at kernel
+    # granularity, so an individual kernel's execution dilates only by the
+    # co-residency overhead (cache/queue, interference.ETA_PER_RESIDENT);
+    # the sharing factor shows up as wait time between kernels instead.
+    kwork: float = 0.0
+
+
+@dataclasses.dataclass
+class _JobState:
+    job: Job
+    next_task: int = 0
+    worker: Optional[int] = None
+
+
+class Simulator:
+    """Event-driven processor-sharing simulation of the worker-pool protocol."""
+
+    def __init__(self, scheduler: Scheduler, *, workers: int,
+                 poll_interval: float = 0.05, crash_delay: float = 8.0):
+        self.sched = scheduler
+        self.workers = workers
+        self.poll = poll_interval  # retry cadence when no device is feasible
+        # a job that dies of OOM still burned startup time (process launch,
+        # data load) before the failed alloc — without this, crash cascades
+        # are instantaneous and the unsafe scheduler's crash rate is inflated
+        self.crash_delay = crash_delay
+
+    def run(self, jobs: Sequence[Job], *, time_limit: float = 1e7,
+            failure_at: Optional[Tuple[float, int]] = None) -> SimResult:
+        """``failure_at``: (time, device) — kill a device mid-run; its
+        resident jobs' tasks re-enter the queue (fault-tolerance path)."""
+        queue: List[_JobState] = [_JobState(j) for j in jobs]
+        for js in queue:
+            js.job.arrival_t = 0.0
+        waiting: List[_JobState] = []       # picked by a worker, no device yet
+        running: Dict[int, _Running] = {}   # task uid -> running record
+        idle_workers = self.workers
+        now = 0.0
+        busy: List[float] = [0.0] * len(self.sched.devices)
+        slowdowns: Dict[str, float] = {}
+        dilations: Dict[str, float] = {}
+        solo: Dict[int, float] = {}
+        started: Dict[int, float] = {}
+        completed = crashed = 0
+        crashing: List[Tuple[float, _JobState]] = []  # (worker-free time, job)
+        turnaround: Dict[str, float] = {}
+        failure_pending = failure_at
+
+        def rates() -> Dict[int, Tuple[float, float]]:
+            """device -> (progress rate, per-kernel overhead factor)."""
+            by_dev: Dict[int, List[tuple]] = {}
+            for r in running.values():
+                res = r.task.resources
+                by_dev.setdefault(r.device, []).append(
+                    (res.core_demand, res.bw_demand))
+            return {d: (interference.rate(ds),
+                        1.0 + interference.ETA_PER_RESIDENT * (len(ds) - 1))
+                    for d, ds in by_dev.items()}
+
+        def try_start() -> None:
+            nonlocal idle_workers, crashed, completed
+            # workers pick jobs from the queue while any are idle
+            while idle_workers > 0 and queue:
+                js = queue.pop(0)
+                idle_workers -= 1
+                waiting.append(js)
+            # waiting jobs ask the scheduler for their next task's device
+            still: List[_JobState] = []
+            for js in waiting:
+                task = js.job.tasks[js.next_task]
+                dev = self.sched.task_begin(task)
+                if dev is None:
+                    still.append(js)
+                    continue
+                # memory-unsafe scheduler: admitted past capacity -> OOM
+                # crash after the startup delay (worker stays occupied)
+                if self.sched.devices[dev].oom():
+                    self.sched.task_end(task)
+                    js.job.crashed = True
+                    crashing.append((now + self.crash_delay, js))
+                    continue
+                task.start_t = now
+                started[task.uid] = now
+                solo[task.uid] = task.resources.est_seconds
+                running[task.uid] = _Running(task, js, task.resources.est_seconds,
+                                             dev)
+            waiting[:] = still
+
+        def _finish_job(js: _JobState, crashed_job: bool = False) -> None:
+            nonlocal idle_workers, crashed, completed
+            if crashed_job:
+                crashed += 1
+            else:
+                completed += 1
+                js.job.finish_t = now
+                turnaround[js.job.name or str(js.job.uid)] = \
+                    now - js.job.arrival_t
+            idle_workers += 1
+
+        def reap_crashed() -> None:
+            nonlocal crashing
+            done = [(t, js) for t, js in crashing if t <= now + _EPS]
+            crashing = [(t, js) for t, js in crashing if t > now + _EPS]
+            for _, js in done:
+                js.job.finish_t = now
+                _finish_job(js, crashed_job=True)
+
+        try_start()
+        while running or waiting or queue or crashing:
+            if now > time_limit:
+                break
+            if not running and crashing:
+                now = min(t for t, _ in crashing)
+                reap_crashed()
+                try_start()
+                continue
+            if not running:
+                # nothing progresses: either a failure is pending or the
+                # scheduler is waiting on a poll retry
+                if failure_pending is not None and failure_pending[0] <= now + self.poll:
+                    now = max(now, failure_pending[0])
+                else:
+                    now += self.poll
+                    if failure_pending and now >= failure_pending[0]:
+                        pass
+                try_start()
+                if not running and not queue and not waiting:
+                    break
+                if not running and failure_pending is None and not queue:
+                    # waiting jobs can never start (e.g. task > device HBM):
+                    # count them as crashed-at-submit to avoid livelock
+                    for js in waiting:
+                        js.job.crashed = True
+                        _finish_job(js, crashed_job=True)
+                    waiting.clear()
+                    break
+                if not running:
+                    continue
+            rt = rates()
+            # next event: earliest task completion at current rates, next
+            # poll tick (if anyone is waiting), or the injected failure
+            dt_done = min((r.remaining / rt[r.device][0]
+                           for r in running.values()),
+                          default=float("inf"))
+            dt = dt_done
+            if waiting or queue:
+                dt = min(dt, self.poll)
+            if crashing:
+                dt = min(dt, max(min(t for t, _ in crashing) - now, 0.0))
+            if failure_pending is not None:
+                dt = min(dt, max(failure_pending[0] - now, 0.0))
+            dt = max(dt, _EPS)
+            # advance; accumulate per-kernel overhead against work done
+            for r in running.values():
+                rate_d, overhead_d = rt[r.device]
+                work = dt * rate_d
+                r.remaining -= work
+                r.kwork += work * overhead_d
+            for d, ds in _group_devices(running).items():
+                busy[d] += dt
+            now += dt
+            reap_crashed()
+            # failure injection
+            if failure_pending is not None and now >= failure_pending[0] - _EPS:
+                _, dead = failure_pending
+                failure_pending = None
+                evicted = self.sched.mark_dead(dead)
+                for t in evicted:
+                    rec = running.pop(t.uid, None)
+                    if rec is not None:
+                        # restart from scratch on another device (task-level
+                        # checkpoint/restart is the executor's job)
+                        rec.job.next_task = min(rec.job.next_task,
+                                                len(rec.job.job.tasks) - 1)
+                        waiting.append(rec.job)
+            # completions
+            done = [uid for uid, r in running.items() if r.remaining <= 1e-9]
+            for uid in done:
+                rec = running.pop(uid)
+                self.sched.task_end(rec.task)
+                rec.task.finish_t = now
+                dur = now - started[uid]
+                if solo[uid] > 0:
+                    key = rec.task.name or str(uid)
+                    dilations[key] = dur / solo[uid]
+                    slowdowns[key] = rec.kwork / solo[uid]
+                js = rec.job
+                js.next_task += 1
+                if js.next_task >= len(js.job.tasks):
+                    _finish_job(js)
+                else:
+                    waiting.append(js)
+            try_start()
+
+        makespan = now
+        util = (sum(busy) / (len(busy) * makespan)) if makespan > 0 else 0.0
+        return SimResult(
+            makespan=makespan,
+            throughput=completed / makespan if makespan > 0 else 0.0,
+            completed=completed, crashed=crashed,
+            turnaround=turnaround, slowdowns=slowdowns, dilations=dilations,
+            device_busy=busy, utilization=util)
+
+
+def _group_devices(running: Dict[int, _Running]) -> Dict[int, List[tuple]]:
+    out: Dict[int, List[tuple]] = {}
+    for r in running.values():
+        res = r.task.resources
+        out.setdefault(r.device, []).append((res.core_demand, res.bw_demand))
+    return out

@@ -1,0 +1,292 @@
+"""Workload generation for the paper's evaluation (§V-A).
+
+Rodinia-analogue jobs: a library of kernel families with the same resource
+personalities as the paper's picks (backprop, srad v1/v2, lavaMD, needle,
+dwt2d, bfs) expressed as pure-JAX computations. Each job's ResourceVector is
+obtained the compiler-guided way — ``jit(fn).lower(ShapeDtypeStruct...).
+compile()`` and probing the artifact (no allocation, so we probe at FULL
+multi-GB footprints even on this CPU container). Durations are the roofline
+estimate scaled by an iteration count calibrated to the paper's 5-10-minute
+workloads.
+
+Mixes (Table I): large = >4 GB footprint, small = 1-4 GB; W1..W8 are
+{16, 32} jobs x {1:1, 2:1, 3:1, 5:1} large:small, randomly drawn but seeded.
+
+NN jobs (§V-E): predict / train / detect / generate personalities probed from
+THIS repo's real model substrate (prefill / train_step / decode of reduced
+archs) — each network 0.5-1.5 GB, detect deliberately low-utilization
+(nvidia-smi reported <=25% for yolo with MULTIPLE jobs resident, i.e.
+<=1/8 per job — demands are calibrated to the paper's own utilization data).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.probe import probe_fn
+from repro.core.task import Job, ResourceVector, Task, UnitTask
+
+GB = 1024**3
+
+
+# ---------------------------------------------------------------------------
+# Rodinia-analogue kernel library
+# ---------------------------------------------------------------------------
+# Each entry: (fn(n) kernel over an n-element working set, bytes-per-n,
+# personality notes). All fns are jittable; probes run on ShapeDtypeStructs.
+
+def _k_backprop(x, w1, w2):
+    """2-layer MLP fwd+bwd over a chunk (pattern recognition)."""
+    def loss(w1, w2):
+        h = jnp.tanh(x @ w1)
+        return jnp.sum(jnp.square(h @ w2))
+    g1, g2 = jax.grad(loss, argnums=(0, 1))(w1, w2)
+    return w1 - 1e-3 * g1, w2 - 1e-3 * g2
+
+
+def _k_srad(img):
+    """Anisotropic diffusion stencil sweep (image processing)."""
+    def step(im, _):
+        n = jnp.roll(im, 1, 0) + jnp.roll(im, -1, 0) \
+            + jnp.roll(im, 1, 1) + jnp.roll(im, -1, 1) - 4 * im
+        g = n / (im + 1e-6)
+        c = 1.0 / (1.0 + jnp.square(g))
+        return im + 0.1 * c * n, None
+    out, _ = jax.lax.scan(step, img, None, length=8)
+    return out
+
+
+def _k_lavamd(pos, q):
+    """All-pairs-in-neighborhood force kernel (molecular dynamics)."""
+    def cell(p_block):
+        d = p_block[:, None, :] - p_block[None, :, :]   # [c, c, 3]
+        r2 = jnp.sum(d * d, axis=-1) + 1e-3
+        f = q[:, None] * q[None, :] / r2
+        return jnp.sum(f[..., None] * d, axis=1)
+    return jax.vmap(cell)(pos)
+
+
+def _k_needle(seq):
+    """Wavefront DP over an alignment matrix (bioinformatics)."""
+    def row(prev, s):
+        cur = jnp.maximum(prev + s, jnp.roll(prev, 1) - 1.0)
+        return cur, cur
+    _, rows = jax.lax.scan(row, seq[0], seq)
+    return rows
+
+
+def _k_dwt2d(img):
+    """Separable wavelet transform passes (image/video compression)."""
+    lo = (img[:, ::2] + img[:, 1::2]) * 0.5
+    hi = (img[:, ::2] - img[:, 1::2]) * 0.5
+    lo2 = (lo[::2] + lo[1::2]) * 0.5
+    hi2 = (lo[::2] - lo[1::2]) * 0.5
+    return lo2, hi2, hi
+
+
+def _k_bfs(adj, frontier):
+    """Sparse frontier expansion as dense matvec rounds (graph)."""
+    def step(f, _):
+        nf = jnp.clip(adj @ f, 0.0, 1.0)
+        return nf, jnp.sum(nf)
+    out, sums = jax.lax.scan(step, frontier, None, length=4)
+    return out, sums
+
+
+# Achieved-efficiency profiles (core_eff, bw_eff): the fraction of peak
+# compute / HBM bandwidth each family reaches while running solo. Dense
+# matmuls run near the MXU roof; stencils reach ~half of stream bandwidth;
+# wavefront DP and graph frontier expansion are latency-bound. Calibrated to
+# the paper's motivating observation that a typical workload uses ~30% of a
+# device (§I) — the mixes below average ~=0.35 dominant-resource share.
+EFFICIENCY = {
+    "backprop": (0.85, 0.60),
+    "srad_v1": (0.50, 0.45),
+    "srad_v2": (0.50, 0.45),
+    "lavamd": (0.90, 0.50),
+    "needle": (0.30, 0.25),
+    "dwt2d": (0.40, 0.35),
+    "bfs": (0.25, 0.20),
+}
+
+
+def _probe_at(family: str, n: int) -> ResourceVector:
+    """Probe one kernel family at an n-element working set (no allocation)."""
+    S = jax.ShapeDtypeStruct
+    f32 = jnp.float32
+    eff = EFFICIENCY[family]
+    if family == "backprop":
+        d = max(int((n / 6) ** 0.5) // 128 * 128, 256)
+        return probe_fn(_k_backprop, S((d, d), f32), S((d, d), f32),
+                        S((d, d), f32), efficiency=eff)
+    if family in ("srad_v1", "srad_v2"):
+        side = max(int((n / 2) ** 0.5) // 128 * 128, 256)
+        return probe_fn(_k_srad, S((side, side), f32), efficiency=eff)
+    if family == "lavamd":
+        cells_ = max(n // (4 * 128), 64)
+        return probe_fn(_k_lavamd, S((cells_, 128, 3), f32), S((128,), f32),
+                        efficiency=eff)
+    if family == "needle":
+        side = max(int((n / 2) ** 0.5) // 128 * 128, 256)
+        return probe_fn(_k_needle, S((side, side), f32), efficiency=eff)
+    if family == "dwt2d":
+        side = max(int((n / 2) ** 0.5) // 128 * 128, 256)
+        return probe_fn(_k_dwt2d, S((side, side), f32), efficiency=eff)
+    if family == "bfs":
+        side = max(int(n ** 0.5) // 128 * 128, 256)
+        return probe_fn(_k_bfs, S((side, side), f32), S((side,), f32),
+                        efficiency=eff)
+    raise KeyError(family)
+
+
+@functools.lru_cache(maxsize=None)
+def _probe_family(family: str, footprint_bytes: int) -> ResourceVector:
+    """Probe a kernel family, CALIBRATING the working-set size until the
+    compiled footprint (args + temps, which the nominal size underestimates)
+    lands within 25% of the target. Footprint is ~linear in n, so 1-3
+    fixed-point steps converge."""
+    n = footprint_bytes // 4
+    vec = _probe_at(family, n)
+    for _ in range(3):
+        ratio = vec.hbm_bytes / footprint_bytes
+        if 0.75 <= ratio <= 1.25:
+            break
+        n = max(int(n / ratio), 1 << 16)
+        vec = _probe_at(family, n)
+    return vec
+
+
+# paper: 7 combos at 1-4 GB (all but lavaMD), 10 combos > 4 GB (all but bfs)
+SMALL_FAMILIES = ["backprop", "srad_v1", "srad_v2", "needle", "dwt2d", "bfs"]
+LARGE_FAMILIES = ["backprop", "srad_v1", "srad_v2", "lavamd", "needle",
+                  "dwt2d"]
+SMALL_RANGE = (1.0 * GB, 4.0 * GB)
+LARGE_RANGE = (4.5 * GB, 13.0 * GB)
+# calibrate job durations to the paper's 5-10-minute workload scale
+TARGET_JOB_SECONDS = (8.0, 40.0)
+
+
+def make_rodinia_job(rng: np.random.Generator, *, large: bool,
+                     name: str) -> Job:
+    fam = rng.choice(LARGE_FAMILIES if large else SMALL_FAMILIES)
+    lo, hi = LARGE_RANGE if large else SMALL_RANGE
+    # snap footprints to a small grid so the probe cache hits
+    foot = int(rng.uniform(lo, hi) / (0.5 * GB)) * int(0.5 * GB)
+    base = _probe_family(str(fam), foot)
+    tgt = rng.uniform(*TARGET_JOB_SECONDS)
+    vec = base.scaled(tgt / max(base.est_seconds, 1e-9))
+    unit = UnitTask(fn=None, memobjs=frozenset({f"{name}/ws"}),
+                    resources=vec, name=f"{fam}-{foot // GB}G")
+    return Job(tasks=[Task(units=[unit], name=unit.name)], name=name)
+
+
+def make_mix(seed: int, n_jobs: int, ratio: Tuple[int, int]) -> List[Job]:
+    """ratio = (large, small), e.g. (3, 1). Jobs randomly drawn, seeded."""
+    rng = np.random.default_rng(seed)
+    lg, sm = ratio
+    jobs = []
+    for i in range(n_jobs):
+        large = (i % (lg + sm)) < lg
+        jobs.append(make_rodinia_job(rng, large=large, name=f"job{i:03d}"))
+    order = rng.permutation(len(jobs))
+    return [jobs[i] for i in order]
+
+
+# Table I: the eight Rodinia workloads
+WORKLOADS: Dict[str, Tuple[int, Tuple[int, int]]] = {
+    "W1": (16, (1, 1)), "W2": (16, (2, 1)), "W3": (16, (3, 1)),
+    "W4": (16, (5, 1)), "W5": (32, (1, 1)), "W6": (32, (2, 1)),
+    "W7": (32, (3, 1)), "W8": (32, (5, 1)),
+}
+
+
+def workload(name: str, seed: int = 0) -> List[Job]:
+    n, ratio = WORKLOADS[name]
+    # stable per-workload seed (python hash() is salted per process)
+    tag = sum(ord(c) * 31 ** i for i, c in enumerate(name)) % 1000
+    return make_mix(seed + tag, n, ratio)
+
+
+# ---------------------------------------------------------------------------
+# NN jobs (§V-E) — probed from this repo's real model substrate
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _nn_vector(kind: str) -> ResourceVector:
+    from repro.configs.registry import get_arch
+    from repro.launch.flops import forward_flops, step_flops
+    from repro.configs.base import ShapeConfig
+    from repro.optim.adamw import AdamWConfig
+    from repro.serve.decode import make_prefill_step
+    from repro.train.train_step import abstract_train_state, make_train_step
+
+    if kind == "predict":   # darknet19/53 classification: prefill-like
+        cfg = get_arch("qwen1.5-32b").reduced()
+        shape = ShapeConfig("nn_predict", 1024, 8, "prefill")
+        step = make_prefill_step(cfg, attn_impl="flash_jnp")
+        params, _ = abstract_train_state(cfg, AdamWConfig())
+        from repro.launch.specs import input_specs
+        batch = input_specs(cfg, shape)
+        compiled = jax.jit(step).lower(params, batch).compile()
+        from repro.core.probe import vector_from_compiled
+        return vector_from_compiled(
+            compiled, flops_override=forward_flops(cfg, 8, 1024),
+            work_scale=400.0, efficiency=(0.18, 0.15))
+    if kind == "train":     # CIFAR-small training
+        cfg = get_arch("gemma2-9b").reduced()
+        shape = ShapeConfig("nn_train", 512, 16, "train")
+        opt = AdamWConfig()
+        step = make_train_step(cfg, opt, attn_impl="flash_jnp")
+        params, opts = abstract_train_state(cfg, opt)
+        from repro.launch.specs import input_specs
+        batch = input_specs(cfg, shape)
+        compiled = jax.jit(step).lower(params, opts, batch).compile()
+        from repro.core.probe import vector_from_compiled
+        return vector_from_compiled(
+            compiled, flops_override=step_flops(cfg, shape),
+            work_scale=250.0, efficiency=(0.39, 0.30))
+    if kind == "detect":    # yolo real-time: tiny, low utilization (<=25%)
+        import dataclasses as _dc
+        base = _nn_vector("predict")
+        return _dc.replace(base.scaled(0.5), core_demand=0.12,
+                           bw_demand=0.10, hbm_bytes=int(0.6 * GB))
+    if kind == "generate":  # RNN text generation: decode-step personality
+        from repro.serve.decode import abstract_cache, make_serve_step
+        cfg = get_arch("musicgen-large").reduced()
+        serve = make_serve_step(cfg)
+        params, _ = abstract_train_state(cfg, AdamWConfig())
+        cache = abstract_cache(cfg, 8, 512)
+        tok = jax.ShapeDtypeStruct((8,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        compiled = jax.jit(serve).lower(params, cache, tok, pos).compile()
+        from repro.core.probe import vector_from_compiled
+        return vector_from_compiled(compiled, work_scale=20000.0,
+                                    efficiency=(0.05, 0.275))
+    raise KeyError(kind)
+
+
+NN_KINDS = ("predict", "train", "detect", "generate")
+# paper: each NN's device state is 0.5-1.5 GB
+_NN_MEM = {"predict": int(1.1 * GB), "train": int(1.5 * GB),
+           "detect": int(0.6 * GB), "generate": int(0.5 * GB)}
+
+
+def make_nn_job(kind: str, idx: int) -> Job:
+    import dataclasses as _dc
+    vec = _dc.replace(_nn_vector(kind), hbm_bytes=_NN_MEM[kind])
+    unit = UnitTask(fn=None, memobjs=frozenset({f"nn{idx}/{kind}"}),
+                    resources=vec, name=f"{kind}{idx}")
+    return Job(tasks=[Task(units=[unit], name=unit.name)], name=f"{kind}{idx}")
+
+
+def nn_homogeneous(kind: str, n_jobs: int = 8) -> List[Job]:
+    return [make_nn_job(kind, i) for i in range(n_jobs)]
+
+
+def nn_mix(seed: int, n_jobs: int = 128) -> List[Job]:
+    rng = np.random.default_rng(seed)
+    return [make_nn_job(str(rng.choice(NN_KINDS)), i) for i in range(n_jobs)]

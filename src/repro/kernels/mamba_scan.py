@@ -1,0 +1,90 @@
+"""Pallas chunked selective-scan (the Mamba-1 recurrence hot loop).
+
+h_t = a_t * h_{t-1} + b_t over the sequence, per (batch, channel, state).
+
+TPU adaptation (DESIGN.md §2): the CUDA kernel is a warp-level parallel scan
+in shared memory. TPUs have no warp shuffles; the VMEM-native formulation is
+a CHUNKED sequential scan — grid over (batch, channel blocks), each program
+walks the sequence in [chunk, block_e, n] VMEM tiles with the running state
+[block_e, n] carried in registers. Within a tile the recurrence unrolls along
+the chunk, which the VPU pipelines; HBM traffic is read-once/write-once
+(the pure-XLA associative scan materializes log(S) intermediate sweeps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(a_ref, b_ref, h_all_ref, h_last_ref, *, chunk):
+    """One (batch, e-block) program. a/b_ref: [S, block_e, N]."""
+    s = a_ref.shape[0]
+    block_e, n = a_ref.shape[1], a_ref.shape[2]
+    nchunks = s // chunk
+
+    def outer(c, h):
+        base = c * chunk
+        a_tile = pl.load(a_ref, (pl.ds(base, chunk), slice(None), slice(None)))
+        b_tile = pl.load(b_ref, (pl.ds(base, chunk), slice(None), slice(None)))
+
+        def inner(t, carry):
+            h_in, out_tile = carry
+            h_new = a_tile[t] * h_in + b_tile[t]
+            out_tile = jax.lax.dynamic_update_index_in_dim(
+                out_tile, h_new, t, axis=0)
+            return h_new, out_tile
+
+        h, out_tile = jax.lax.fori_loop(
+            0, chunk, inner, (h, jnp.zeros((chunk, block_e, n), h.dtype)))
+        pl.store(h_all_ref, (pl.ds(base, chunk), slice(None), slice(None)),
+                 out_tile)
+        return h
+
+    h = jnp.zeros((block_e, n), jnp.float32)
+    h = jax.lax.fori_loop(0, nchunks, outer, h)
+    h_last_ref[...] = h
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block_e", "interpret"))
+def mamba_scan(a, b, *, chunk: int = 64, block_e: int = 128,
+               interpret: bool = True):
+    """a, b: [B, S, E, N] f32 -> (h_all [B,S,E,N], h_last [B,E,N]).
+
+    Zero initial state (matches the training path; decode uses the one-step
+    recurrent update instead).
+    """
+    bsz, s, e, n = a.shape
+    block_e = min(block_e, e)
+    assert e % block_e == 0, (e, block_e)
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    grid = (bsz, e // block_e)
+
+    def idx(bi, ei):
+        return (bi, 0, ei, 0)
+
+    def idx_last(bi, ei):
+        return (bi, ei, 0)
+
+    h_all, h_last = pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, s, block_e, n), idx),
+            pl.BlockSpec((None, s, block_e, n), idx),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, s, block_e, n), idx),
+            pl.BlockSpec((None, block_e, n), idx_last),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, e, n), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, e, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b)
+    return h_all, h_last

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, logit_softcap=0.0):
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D] -> [B, Hq, Sq, D]."""
+    return L.naive_attention(q, k, v, causal=causal, window=window,
+                             logit_softcap=logit_softcap)
+
+
+def rmsnorm_ref(x, scale, eps=1e-5):
+    return L.rms_norm(x, scale, eps)
+
+
+def mamba_scan_ref(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t. a, b: [B, S, E, N]; h0: [B, E, N].
+
+    Returns (h_all [B,S,E,N], h_last [B,E,N])."""
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+    aT = jnp.moveaxis(a, 1, 0)
+    bT = jnp.moveaxis(b, 1, 0)
+    h_last, hs = jax.lax.scan(step, h0, (aT, bT))
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def moe_gmm_ref(x, w, group_sizes):
+    """Grouped matmul: rows of x belong to expert g per group_sizes.
+
+    x: [T, D] (rows sorted by expert), w: [E, D, F], group_sizes: [E] summing
+    to T. Returns [T, F] where row t is x[t] @ w[expert_of(t)].
+    """
+    t = x.shape[0]
+    bounds = jnp.cumsum(group_sizes)
+    expert_of = jnp.searchsorted(bounds, jnp.arange(t), side="right")
+    return jnp.einsum("td,tdf->tf", x, w[expert_of])

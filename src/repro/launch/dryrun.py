@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and record memory/cost/roofline — deliverable (e)/(g).
+
+The two lines above MUST run before any jax import: jax locks the device count
+at first init, and the dry-run needs 512 placeholder host devices to build the
+(pod=2, data=16, model=16) mesh. This flag is set ONLY here (smoke tests and
+benchmarks see 1 device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import ARCHS, cells, get_arch, get_shape
+from repro.dist import sharding as SH
+from repro.launch import roofline as RL
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.specs import input_specs
+from repro.optim.adamw import AdamWConfig
+from repro.serve.decode import abstract_cache, make_prefill_step, make_serve_step
+from repro.train.train_step import abstract_train_state, make_train_step
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+               attn_impl: str = "flash", opt_overrides: dict = None,
+               return_lowered: bool = False):
+    """Lower + compile one (arch x shape) cell. Returns a result dict."""
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    ctx = SH.activation_mesh(mesh)
+    ctx.__enter__()
+
+    params_sds, opt_sds = None, None
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=cfg.optimizer_moment_dtype,
+                              **(opt_overrides or {}))
+        # each microbatch must still shard over the full data axis
+        dax = 1
+        for ax in data_axes(mesh):
+            dax *= mesh.shape[ax]
+        mb = max(1, min(cfg.num_microbatches, shape.global_batch // dax))
+        step = make_train_step(cfg, opt_cfg, attn_impl=attn_impl,
+                               num_microbatches=mb)
+        params_sds, opt_sds = abstract_train_state(cfg, opt_cfg)
+        psh = _named(mesh, SH.param_specs(cfg, params_sds, mesh))
+        osh = {"mu": psh, "nu": psh,
+               "step": NamedSharding(mesh, P())}
+        batch_sds = input_specs(cfg, shape)
+        bsh = _named(mesh, SH.batch_specs(cfg, batch_sds, mesh))
+        jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                         out_shardings=(psh, osh, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        prefill = make_prefill_step(cfg, attn_impl=attn_impl)
+        params_sds, _ = abstract_train_state(cfg, AdamWConfig())
+        psh = _named(mesh, SH.param_specs(cfg, params_sds, mesh))
+        batch_sds = input_specs(cfg, shape)
+        bsh = _named(mesh, SH.batch_specs(cfg, batch_sds, mesh))
+        # pin the OUTPUT cache sharding: left to the compiler it comes out
+        # model-replicated (llama3 prefill_32k: +33.8 GB/device)
+        out_sds = jax.eval_shape(prefill, params_sds, batch_sds)
+        csh = _named(mesh, SH.cache_specs(cfg, out_sds[1], mesh))
+        lowered = jax.jit(prefill, in_shardings=(psh, bsh),
+                          out_shardings=(None, csh)).lower(
+            params_sds, batch_sds)
+    else:  # decode
+        serve = make_serve_step(cfg)
+        params_sds, _ = abstract_train_state(cfg, AdamWConfig())
+        psh = _named(mesh, SH.param_specs(cfg, params_sds, mesh))
+        cache_sds = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        ctx_par = shape.global_batch < mesh.shape["data"]
+        csh = _named(mesh, SH.cache_specs(cfg, cache_sds, mesh,
+                                          context_parallel=ctx_par))
+        io = input_specs(cfg, shape)
+        tok_sh = _named(mesh, SH.batch_specs(
+            cfg, {"tokens": io["tokens"]}, mesh))["tokens"]
+        pos_sh = NamedSharding(mesh, P())
+        lowered = jax.jit(serve, in_shardings=(psh, csh, tok_sh, pos_sh),
+                          out_shardings=(None, csh),
+                          donate_argnums=(1,)).lower(
+            params_sds, cache_sds, io["tokens"], io["pos"])
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    ctx.__exit__(None, None, None)
+    rl = RL.analyze(compiled, cfg, shape, chips)
+    mem = compiled.memory_analysis()
+    result = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "peak_per_device": rl.peak_mem_per_device,
+            "fits_16GB": rl.peak_mem_per_device <= 16e9,
+        },
+        "roofline": rl.to_dict(),
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    if return_lowered:
+        return result, lowered, compiled
+    return result
+
+
+def run_all(multi_pod: bool, out_dir: str, only_arch=None):
+    os.makedirs(out_dir, exist_ok=True)
+    summary = []
+    for cfg, shape, skip in cells():
+        if only_arch and cfg.name != only_arch:
+            continue
+        tag = f"{cfg.name}__{shape.name}__{'2x16x16' if multi_pod else '16x16'}"
+        path = os.path.join(out_dir, tag + ".json")
+        if skip:
+            res = {"arch": cfg.name, "shape": shape.name, "status": "SKIP",
+                   "reason": "long_500k needs sub-quadratic attention "
+                             "(DESIGN.md long_500k applicability)"}
+        elif os.path.exists(path):
+            with open(path) as f:
+                res = json.load(f)
+            summary.append(res)
+            print(f"[cached] {tag}")
+            continue
+        else:
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                res = lower_cell(cfg.name, shape.name, multi_pod=multi_pod)
+                r = res["roofline"]
+                print(f"  ok: compute={r['compute_s']:.3f}s "
+                      f"memory={r['memory_s']:.3f}s "
+                      f"collective={r['collective_s']:.3f}s "
+                      f"dominant={r['dominant']} "
+                      f"peak_mem={res['memory']['peak_per_device']/1e9:.2f}GB",
+                      flush=True)
+            except Exception as e:  # a failure here is a bug in our system
+                res = {"arch": cfg.name, "shape": shape.name, "status": "FAIL",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"  FAIL: {e}", flush=True)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        summary.append(res)
+    n_ok = sum(1 for r in summary if r.get("status") == "ok")
+    n_skip = sum(1 for r in summary if r.get("status") == "SKIP")
+    n_fail = sum(1 for r in summary if r.get("status") == "FAIL")
+    print(f"\n=== dry-run: {n_ok} ok / {n_skip} skip / {n_fail} FAIL ===")
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+    if args.all or (args.arch is None):
+        run_all(args.multi_pod, args.out_dir, only_arch=args.arch)
+        return
+    res = lower_cell(args.arch, args.shape, multi_pod=args.multi_pod)
+    print(json.dumps(res, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so that
+importing this module never touches jax device state — the dry-run must set
+XLA_FLAGS before first jax init.
+
+Axes:
+  * ``data``  — batch / FSDP axis (16-way per pod)
+  * ``model`` — tensor/expert-parallel axis (16-way, intra-pod ICI)
+  * ``pod``   — multi-pod data-parallel axis (DCN); gradients all-reduce across it
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Generic helper for tests/examples (e.g. 1x1 CPU mesh)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes over which the batch is sharded (pod joins data when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fsdp_axis(mesh) -> str:
+    return "data"
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,30 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable, weak-type
+correct, zero allocation. Shared by the dry-run, the probe, and benchmarks."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    """Inputs for the step function the given shape lowers.
+
+    train/prefill: the full-sequence batch; decode: one token per sequence.
+    [vlm]/[audio] archs get precomputed frontend embeddings per spec.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": SDS((b,), jnp.int32),
+                "pos": SDS((), jnp.int32)}
+    specs = {"tokens": SDS((b, s), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = SDS((b, s), jnp.int32)
+    if cfg.embedding_frontend_stub:
+        specs["embeds"] = SDS((b, s, cfg.d_model), jnp.bfloat16)
+    return specs

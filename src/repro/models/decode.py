@@ -1,0 +1,172 @@
+"""One-token decode over model caches, for every architecture family.
+
+Caches:
+  * ATTN stacks: KV tensors stacked over layers ``[L, B, Hkv, Smax, hd]``.
+    Pure-SWA archs (mixtral) get a ring buffer of size ``min(Smax, window)`` —
+    the window is enforced by overwrite, so a 500k-token context costs O(window)
+    HBM (this is what makes mixtral long_500k runnable, DESIGN.md §4).
+  * SSM (falcon-mamba): conv + SSM recurrent states per layer, O(1) in context.
+  * hybrid (zamba2): grouped Mamba-2 states + per-group shared-attention KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as SSM
+from repro.models.model import (
+    Params, attn_decode_block, logits_from_hidden, _layer_window,
+)
+from repro.models.moe import moe_apply
+
+Cache = Dict[str, Any]
+
+
+def uses_ring(cfg: ArchConfig) -> bool:
+    return cfg.sliding_window > 0 and not cfg.local_global_alternate
+
+
+def cache_seq_len(cfg: ArchConfig, max_seq: int) -> int:
+    return min(max_seq, cfg.sliding_window) if uses_ring(cfg) else max_seq
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Cache:
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    if cfg.family == "ssm":
+        e = cfg.ssm.expand * cfg.d_model
+        return {
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm.conv_width - 1, e),
+                              dtype),
+            "ssm": jnp.zeros((cfg.n_layers, batch, e, cfg.ssm.state_dim),
+                             jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_shared_every
+        g = cfg.n_layers // k
+        e = cfg.ssm.expand * cfg.d_model
+        n = cfg.ssm.state_dim
+        nh = e // cfg.ssm.headdim
+        smax = cache_seq_len(cfg, max_seq)
+        return {
+            "m_conv": jnp.zeros((g, k - 1, batch, cfg.ssm.conv_width - 1,
+                                 e + 2 * n), dtype),
+            "m_ssm": jnp.zeros((g, k - 1, batch, nh, cfg.ssm.headdim, n),
+                               jnp.float32),
+            "k": jnp.zeros((g, batch, cfg.n_kv_heads, smax, hd), dtype),
+            "v": jnp.zeros((g, batch, cfg.n_kv_heads, smax, hd), dtype),
+        }
+    smax = cache_seq_len(cfg, max_seq)
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, smax, hd)
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_s": jnp.zeros(shape[:-1], dtype),
+            "v_s": jnp.zeros(shape[:-1], dtype),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Cache,
+                tokens: jax.Array, pos: jax.Array
+                ) -> Tuple[jax.Array, Cache]:
+    """tokens: [B] int32; pos: scalar int32 (current position, 0-based).
+
+    Returns (logits [B, V] f32, updated cache).
+    """
+    from repro.dist.sharding import constrain
+    x = params["embed"][tokens]  # [B, d]
+    x = constrain(x, "batch", None)
+    if cfg.name.startswith("gemma2"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    ring = uses_ring(cfg)
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, conv, ssm_state = xs
+            conv = jax.lax.optimization_barrier(conv)
+            ssm_state = jax.lax.optimization_barrier(ssm_state)
+            y, new = SSM.mamba1_decode_step(
+                lp["mamba"], L.rms_norm(h, lp["norm"]),
+                {"conv": conv, "ssm": ssm_state}, cfg.ssm)
+            return h + y, (new["conv"], new["ssm"])
+        x, (conv, ssm_state) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]))
+        new_cache = {"conv": conv, "ssm": ssm_state}
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def group_body(h, xs):
+            gp, mconv, mssm, kc, vc = xs
+            kc = jax.lax.optimization_barrier(kc)
+            vc = jax.lax.optimization_barrier(vc)
+
+            def mamba_body(hh, ys):
+                mp, conv, st = ys
+                y, new = SSM.mamba2_decode_step(
+                    mp["mamba"], L.rms_norm(hh, mp["norm_m"]),
+                    {"conv": conv, "ssm": st}, cfg.ssm)
+                return hh + y, (new["conv"], new["ssm"])
+            h, (mconv, mssm) = jax.lax.scan(
+                mamba_body, h,
+                ({"mamba": gp["mamba"], "norm_m": gp["norm_m"]}, mconv, mssm))
+            a, (kc, vc) = attn_decode_block(
+                shared["attn"], L.rms_norm(h, gp["norm_attn"])[:, None], cfg,
+                pos=pos, kcache=kc, vcache=vc, window=cfg.sliding_window,
+                ring=ring)
+            h = h + a[:, 0]
+            m = L.mlp_apply(shared["mlp"], L.rms_norm(h, gp["norm_mlp"]),
+                            cfg.mlp_act)
+            return h + m, (mconv, mssm, kc, vc)
+        x, (mconv, mssm, kc, vc) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache["m_conv"], cache["m_ssm"],
+             cache["k"], cache["v"]))
+        new_cache = {"m_conv": mconv, "m_ssm": mssm, "k": kc, "v": vc}
+    else:
+        layer_idx = jnp.arange(cfg.n_layers)
+        q8 = cfg.kv_cache_dtype == "int8"
+
+        def body(h, xs):
+            if q8:
+                lp, idx, kc, vc, ks, vs = xs
+            else:
+                lp, idx, kc, vc = xs
+                ks = vs = None
+            # barrier: the attention einsums read the cache with f32
+            # accumulation; without the barrier XLA hoists that convert out
+            # of the layer loop and materializes the WHOLE stacked cache in
+            # f32 (observed +20 GB/device at qwen decode_32k)
+            kc = jax.lax.optimization_barrier(kc)
+            vc = jax.lax.optimization_barrier(vc)
+            window = _layer_window(cfg, idx)
+            a, kv = attn_decode_block(
+                lp["attn"], L.rms_norm(h, lp["norm1"])[:, None], cfg,
+                pos=pos, kcache=kc, vcache=vc, kscale=ks, vscale=vs,
+                window=window, ring=ring)
+            h = h + a[:, 0]
+            hn = L.rms_norm(h, lp["norm2"])[:, None]
+            if cfg.moe is not None:
+                m, _ = moe_apply(lp["moe"], hn, cfg.moe, cfg.mlp_act)
+            else:
+                m = L.mlp_apply(lp["mlp"], hn, cfg.mlp_act)
+            return h + m[:, 0], kv
+        if q8:
+            x, (kc, vc, ks, vs) = jax.lax.scan(
+                body, x, (params["layers"], layer_idx, cache["k"],
+                          cache["v"], cache["k_s"], cache["v_s"]))
+            new_cache = {"k": kc, "v": vc, "k_s": ks, "v_s": vs}
+        else:
+            x, (kc, vc) = jax.lax.scan(
+                body, x,
+                (params["layers"], layer_idx, cache["k"], cache["v"]))
+            new_cache = {"k": kc, "v": vc}
+
+    x = L.rms_norm(x, params["final_norm"])
+    logits = logits_from_hidden(cfg, params, x[:, None])[:, 0]
+    return logits, new_cache

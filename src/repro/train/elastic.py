@@ -1,0 +1,44 @@
+"""Elastic rescale: re-shard a live train state onto a different mesh.
+
+When a pod loses hosts (or gains them back), training continues on a
+shrunken/grown mesh instead of stalling: the sharding rules are re-derived
+for the new mesh (divisibility-aware, so a 16->8-way model axis still
+shards), and every leaf is re-placed with ``jax.device_put``. The data
+pipeline's global batch is re-split over the new data-axis size; the step
+function is re-jitted lazily on first call (shape signature unchanged, so
+only the partitioning changes).
+
+The scheduler composes with this: a slice task whose device count changed
+simply re-enters the queue with an updated ``chips`` in its ResourceVector.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.dist import sharding as SH
+
+
+def reshard_state(cfg: ArchConfig, params: Any, opt_state: Any,
+                  new_mesh: Mesh) -> Tuple[Any, Any]:
+    """Re-place (params, opt_state) onto ``new_mesh`` under re-derived rules."""
+    pspecs = SH.param_specs(cfg, jax.eval_shape(lambda t: t, params), new_mesh)
+    psh = SH.to_named(pspecs, new_mesh)
+    new_params = jax.tree_util.tree_map(jax.device_put, params, psh)
+    new_opt = {
+        "mu": jax.tree_util.tree_map(jax.device_put, opt_state["mu"], psh),
+        "nu": jax.tree_util.tree_map(jax.device_put, opt_state["nu"], psh),
+        "step": jax.device_put(opt_state["step"],
+                               NamedSharding(new_mesh, P())),
+    }
+    return new_params, new_opt
+
+
+def rescale_batch_size(global_batch: int, old_data: int, new_data: int) -> int:
+    """Keep per-device batch constant across the rescale (linear-scaling-rule
+    LR adjustments are the optimizer schedule's job)."""
+    per_dev = max(global_batch // old_data, 1)
+    return per_dev * new_data

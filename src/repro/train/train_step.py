@@ -1,0 +1,79 @@
+"""Train-step factory: loss + grad (+ optional microbatched gradient
+accumulation) + sharded AdamW update, ready for ``jax.jit`` with in/out
+shardings. This function IS the "GPU task" body for training workloads in the
+paper's framework — the scheduler receives its compiler-derived resource vector
+(repro.core.probe) before placement.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import init_params, loss_fn
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, *,
+                    attn_impl: str = "flash",
+                    num_microbatches: Optional[int] = None,
+                    grad_compressor=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_compressor`` (repro.dist.compression) is applied to gradients before
+    the optimizer — with FSDP the compression happens before the cross-pod
+    all-reduce that GSPMD inserts at the psum of the data axis.
+    """
+
+    def compute_grads(params, batch):
+        if not num_microbatches or num_microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, cfg, batch,
+                                               attn_impl=attn_impl)
+        n = num_microbatches
+
+        def split(x):
+            b = x.shape[0]
+            assert b % n == 0, (b, n)
+            return jnp.moveaxis(x.reshape((n, b // n) + x.shape[1:]), 0, 0)
+
+        micro = jax.tree_util.tree_map(split, batch)
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            tot, acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, cfg, mb,
+                                               attn_impl=attn_impl)
+            acc = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32), acc, g)
+            return (tot + l, acc), None
+
+        (tot, acc), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zero_g),
+                                     micro)
+        grads = jax.tree_util.tree_map(lambda g: g / n, acc)
+        return tot / n, grads
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        if grad_compressor is not None:
+            grads = grad_compressor(grads)
+        params, opt_state, metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def abstract_train_state(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                         param_dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for (params, opt_state) — no allocation (dry-run)."""
+    params_sds = jax.eval_shape(
+        functools.partial(init_params, cfg, param_dtype=param_dtype),
+        jax.random.PRNGKey(0))
+    opt_sds = jax.eval_shape(
+        functools.partial(adamw.init_state, opt_cfg), params_sds)
+    return params_sds, opt_sds

@@ -1,0 +1,204 @@
+"""Unit + property tests for the paper's schedulers and task framework."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.scheduler import (
+    CGScheduler, MemOnlyScheduler, MGBAlg2Scheduler, MGBAlg3Scheduler,
+    SAScheduler, SliceScheduler,
+)
+from repro.core.task import Job, ResourceVector, Task, UnitTask
+from repro.core.taskgraph import build_gpu_tasks
+
+GB = 1024**3
+
+
+def mk_task(mem_gb=1.0, demand=0.5, est=10.0, name="t", chips=1):
+    vec = ResourceVector(hbm_bytes=int(mem_gb * GB), flops=1e12,
+                         bytes_accessed=1e9, est_seconds=est,
+                         core_demand=demand, bw_demand=demand, chips=chips)
+    return Task(units=[UnitTask(fn=None, memobjs=frozenset({name}),
+                                resources=vec, name=name)], name=name)
+
+
+# ---------------------------------------------------------------------------
+# memory safety (the paper's core guarantee)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", [SAScheduler, MemOnlyScheduler,
+                                 MGBAlg2Scheduler, MGBAlg3Scheduler])
+def test_memory_safe_schedulers_never_oversubscribe(cls):
+    sched = cls(2)
+    admitted = []
+    for i in range(10):
+        t = mk_task(mem_gb=7.0, name=f"t{i}")
+        if sched.task_begin(t) is not None:
+            admitted.append(t)
+        for d in sched.devices:
+            assert not d.oom()
+    # 2 devices x 16 GB: at most 2 tasks of 7 GB fit per device
+    assert len(admitted) <= 4
+
+
+def test_cg_is_memory_unsafe():
+    sched = CGScheduler(1, ratio=8)
+    for i in range(4):
+        t = mk_task(mem_gb=6.0, name=f"t{i}")
+        assert sched.task_begin(t) == 0
+    assert sched.devices[0].oom()  # 24 GB admitted on a 16 GB device
+
+
+def test_oversized_task_never_admitted_by_safe_schedulers():
+    for cls in (MemOnlyScheduler, MGBAlg2Scheduler, MGBAlg3Scheduler):
+        sched = cls(2)
+        assert sched.task_begin(mk_task(mem_gb=20.0)) is None
+
+
+@given(mems=st.lists(st.floats(0.1, 15.9), min_size=1, max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_property_mgb_memory_invariant(mems):
+    """No sequence of task_begin/task_end calls oversubscribes memory."""
+    sched = MGBAlg3Scheduler(3)
+    live = []
+    for i, m in enumerate(mems):
+        t = mk_task(mem_gb=m, name=f"t{i}")
+        if sched.task_begin(t) is not None:
+            live.append(t)
+        for d in sched.devices:
+            assert d.used_hbm <= d.total_hbm
+        if len(live) > 4:  # retire oldest
+            sched.task_end(live.pop(0))
+    for d in sched.devices:
+        assert d.used_hbm <= d.total_hbm
+
+
+# ---------------------------------------------------------------------------
+# policy behaviour
+# ---------------------------------------------------------------------------
+
+def test_sa_one_job_per_device():
+    sched = SAScheduler(2)
+    assert sched.task_begin(mk_task(name="a")) == 0
+    assert sched.task_begin(mk_task(name="b")) == 1
+    assert sched.task_begin(mk_task(name="c")) is None
+
+
+def test_alg3_picks_least_loaded():
+    sched = MGBAlg3Scheduler(2)
+    sched.task_begin(mk_task(demand=0.9, name="heavy"))    # -> dev 0
+    d = sched.task_begin(mk_task(demand=0.1, name="light"))
+    assert d == 1
+
+
+def test_alg2_compute_is_hard_constraint():
+    sched = MGBAlg2Scheduler(1)
+    assert sched.task_begin(mk_task(demand=0.9, name="a")) == 0
+    # 0.9 + 0.9 > 1.0 of the chip's compute slots -> must wait
+    assert sched.task_begin(mk_task(demand=0.9, name="b")) is None
+    # a small task still fits
+    assert sched.task_begin(mk_task(demand=0.05, name="c")) == 0
+
+
+def test_alg3_compute_is_soft_constraint():
+    sched = MGBAlg3Scheduler(1)
+    assert sched.task_begin(mk_task(demand=0.9, name="a")) == 0
+    assert sched.task_begin(mk_task(demand=0.9, name="b")) == 0  # optimistic
+
+
+def test_memonly_first_fit_never_balances():
+    sched = MemOnlyScheduler(4)
+    for i in range(8):
+        assert sched.task_begin(mk_task(mem_gb=1.0, name=f"t{i}")) == 0
+
+
+def test_mark_dead_evicts_and_excludes():
+    sched = MGBAlg3Scheduler(2)
+    t = mk_task(name="a")
+    assert sched.task_begin(t) == 0
+    evicted = sched.mark_dead(0)
+    assert evicted == [t] and t.device is None
+    assert sched.devices[0].used_hbm == 0
+    t2 = mk_task(name="b")
+    assert sched.task_begin(t2) == 1  # dead device never selected
+    sched.revive(0)
+    assert sched.task_begin(mk_task(name="c")) == 0
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 task construction
+# ---------------------------------------------------------------------------
+
+def mk_unit(name, objs, mem=1.0):
+    vec = ResourceVector(hbm_bytes=int(mem * GB), flops=1e9,
+                         bytes_accessed=1e9, est_seconds=1.0)
+    return UnitTask(fn=None, memobjs=frozenset(objs), resources=vec,
+                    name=name)
+
+
+def test_alg1_merges_shared_memobjs():
+    units = [mk_unit("k1", {"a", "b"}), mk_unit("k2", {"b", "c"}),
+             mk_unit("k3", {"d"})]
+    tasks = build_gpu_tasks(units)
+    assert len(tasks) == 2
+    sizes = sorted(len(t.units) for t in tasks)
+    assert sizes == [1, 2]
+
+
+def test_alg1_transitive_merge():
+    units = [mk_unit("k1", {"a"}), mk_unit("k2", {"a", "b"}),
+             mk_unit("k3", {"b", "c"}), mk_unit("k4", {"c"})]
+    tasks = build_gpu_tasks(units)
+    assert len(tasks) == 1 and len(tasks[0].units) == 4
+
+
+@given(st.lists(st.sets(st.integers(0, 12), min_size=1, max_size=4),
+                min_size=1, max_size=20))
+@settings(max_examples=100, deadline=None)
+def test_property_alg1_partition(objsets):
+    """Merge result is a partition; tasks share no memobjs across tasks."""
+    units = [mk_unit(f"k{i}", {str(o) for o in objs})
+             for i, objs in enumerate(objsets)]
+    tasks = build_gpu_tasks(units)
+    # partition: every unit in exactly one task
+    all_units = [u.uid for t in tasks for u in t.units]
+    assert sorted(all_units) == sorted(u.uid for u in units)
+    # cross-task memobj disjointness (the whole point of Alg. 1)
+    for i, t1 in enumerate(tasks):
+        for t2 in tasks[i + 1:]:
+            assert not (t1.memobjs & t2.memobjs)
+
+
+# ---------------------------------------------------------------------------
+# slice scheduler (beyond-paper)
+# ---------------------------------------------------------------------------
+
+def test_slice_scheduler_places_contiguous():
+    sched = SliceScheduler(pods=1, rows=4, cols=4)
+    t = mk_task(mem_gb=8 * 4, name="big", chips=4)  # 8 GB/chip on 4 chips
+    rect = sched.task_begin(t)
+    assert rect is not None and rect.chips == 4
+    for cell in rect.cells():
+        assert sched.chips[cell].used_hbm == 8 * GB
+    sched.task_end(t)
+    assert all(d.used_hbm == 0 for d in sched.chips.values())
+
+
+def test_slice_scheduler_packs_disjoint():
+    sched = SliceScheduler(pods=1, rows=4, cols=4)
+    t1 = mk_task(mem_gb=10 * 8, name="a", chips=8)
+    t2 = mk_task(mem_gb=10 * 8, name="b", chips=8)
+    r1, r2 = sched.task_begin(t1), sched.task_begin(t2)
+    assert r1 is not None and r2 is not None
+    assert not (set(r1.cells()) & set(r2.cells()))
+
+
+def test_slice_scheduler_chip_failure_evicts_whole_slice():
+    sched = SliceScheduler(pods=1, rows=4, cols=4)
+    t = mk_task(mem_gb=8 * 16, name="whole", chips=16)
+    rect = sched.task_begin(t)
+    assert rect is not None
+    dead_cell = next(iter(rect.cells()))
+    evicted = sched.mark_dead(dead_cell)
+    assert [e.uid for e in evicted] == [t.uid]
+    alive_used = [d.used_hbm for d in sched.chips.values()]
+    assert all(u == 0 for u in alive_used)

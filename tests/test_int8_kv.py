@@ -1,0 +1,87 @@
+"""int8 KV-cache tests (beyond-paper feature, EXPERIMENTS.md §Perf P10)."""
+import dataclasses
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.registry import get_arch
+from repro.models import decode as D
+from repro.models import layers as L
+from repro.models import model as M
+
+
+def test_quantize_kv_roundtrip_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 8, 64))
+    codes, scale = L.quantize_kv(x, jnp.float32)
+    assert codes.dtype == jnp.int8 and scale.shape == (2, 4, 8)
+    recon = codes.astype(jnp.float32) * scale[..., None]
+    err = np.abs(np.asarray(recon - x))
+    bound = np.asarray(jnp.abs(x).max(axis=-1) / 127.0)
+    assert (err <= bound[..., None] * 0.51 + 1e-6).all()
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_property_decode_attention_q8_close_to_fp(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, hq, hkv, s, d = 2, 4, 2, 64, 32
+    q = jax.random.normal(ks[0], (b, hq, 1, d))
+    k = jax.random.normal(ks[1], (b, hkv, s, d))
+    v = jax.random.normal(ks[2], (b, hkv, s, d))
+    cl = jnp.asarray(48)
+    ref = L.decode_attention(q, k, v, cl)
+    kq, ksa = L.quantize_kv(k, jnp.float32)
+    vq, vsa = L.quantize_kv(v, jnp.float32)
+    out = L.decode_attention_q8(q, kq, ksa, vq, vsa, cl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0.05, atol=0.02)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-32b", "llama3-405b"])
+def test_int8_decode_matches_bf16_decode(arch):
+    cfg8 = dataclasses.replace(get_arch(arch).reduced(),
+                               kv_cache_dtype="int8")
+    cfg16 = dataclasses.replace(cfg8, kv_cache_dtype="bfloat16")
+    params = M.init_params(cfg8, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2,), 0, cfg8.vocab)
+    c8 = D.init_cache(cfg8, 2, 32, dtype=jnp.float32)
+    c16 = D.init_cache(cfg16, 2, 32, dtype=jnp.float32)
+    assert c8["k"].dtype == jnp.int8 and "k_s" in c8
+    t = tok
+    for pos in range(5):
+        l8, c8 = D.decode_step(params, cfg8, c8, t,
+                               jnp.asarray(pos, jnp.int32))
+        l16, c16 = D.decode_step(params, cfg16, c16, t,
+                                 jnp.asarray(pos, jnp.int32))
+        err = float(jnp.abs(jax.nn.softmax(l8) - jax.nn.softmax(l16)).max())
+        assert err < 0.03, (pos, err)
+        t = jnp.argmax(l16, -1).astype(jnp.int32)
+
+
+def test_int8_prefill_then_decode():
+    from repro.serve.decode import make_prefill_step
+    cfg = dataclasses.replace(get_arch("gemma2-9b").reduced(),
+                              kv_cache_dtype="int8")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    prefill = make_prefill_step(cfg, attn_impl="naive")
+    logits, cache = prefill(params, {"tokens": tok})
+    assert cache["k"].dtype == jnp.int8
+    # grow seq dim for decode and take a step
+    grown = D.init_cache(cfg, 2, 20, dtype=jnp.bfloat16)
+
+    def graft(dst, src):
+        pad_dim = 3 if src.ndim == 5 else 3
+        pad = dst.shape[pad_dim] - src.shape[pad_dim]
+        cfgpad = [(0, 0)] * src.ndim
+        cfgpad[pad_dim] = (0, pad)
+        return jnp.pad(src, cfgpad).astype(dst.dtype)
+    cache = jax.tree_util.tree_map(graft, grown, cache)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    l2, cache = D.decode_step(params, cfg, cache, nxt,
+                              jnp.asarray(16, jnp.int32))
+    assert np.isfinite(np.asarray(l2)).all()

@@ -1,0 +1,220 @@
+"""Integration tests: live executor, train loop + checkpoint resume,
+prefill->decode consistency, elastic reshard, pipeline parallelism, MoE
+capacity, sharding rules."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import ARCHS, get_arch
+from repro.models import decode as D
+from repro.models import model as M
+
+
+# ---------------------------------------------------------------------------
+# live executor under schedulers (real jitted jobs on virtual devices)
+# ---------------------------------------------------------------------------
+
+def _exec_jobs(n):
+    from repro.core.executor import ExecJob
+    from repro.core.probe import probe_fn
+    from repro.core.task import Job, Task, UnitTask
+    out = []
+    sds = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def f(x):
+        return jnp.tanh(x @ x).sum()
+
+    vec = probe_fn(f, sds)
+    for i in range(n):
+        x = jax.random.normal(jax.random.PRNGKey(i), (256, 256))
+
+        def runner(device, x=x):
+            jax.block_until_ready(jax.jit(f)(x))
+
+        unit = UnitTask(fn=None, memobjs=frozenset({f"j{i}"}),
+                        resources=vec, name=f"j{i}")
+        out.append(ExecJob(job=Job(tasks=[Task(units=[unit], name=f"j{i}")],
+                                   name=f"j{i}"), runners=[runner]))
+    return out
+
+
+def test_executor_completes_under_mgb():
+    from repro.core.executor import Executor
+    from repro.core.scheduler import MGBAlg3Scheduler
+    sched = MGBAlg3Scheduler(2)
+    stats = Executor(sched, workers=3).run(_exec_jobs(6))
+    assert stats["completed"] == 6 and stats["crashed"] == 0
+    devs = {d for _, d in sched.placements}
+    assert devs == {0, 1}  # balanced over both virtual devices
+
+
+def test_executor_cg_oom_crashes_job():
+    from repro.core.executor import ExecJob, Executor, OOMError
+    from repro.core.scheduler import CGScheduler
+    from repro.core.task import Job, ResourceVector, Task, UnitTask
+    import time as _time
+    vec = ResourceVector(hbm_bytes=12 * 1024**3, flops=1e9,
+                         bytes_accessed=1e9, est_seconds=0.01)
+    jobs = []
+    for i in range(3):
+        unit = UnitTask(fn=None, memobjs=frozenset({f"j{i}"}), resources=vec,
+                        name=f"j{i}")
+        jobs.append(ExecJob(
+            job=Job(tasks=[Task(units=[unit], name=f"j{i}")], name=f"j{i}"),
+            runners=[lambda device: _time.sleep(0.3)]))  # hold memory briefly
+    stats = Executor(CGScheduler(1, ratio=3), workers=3).run(jobs)
+    assert stats["crashed"] >= 1  # 3 x 12 GB on one 16 GB device
+
+
+# ---------------------------------------------------------------------------
+# prefill -> decode consistency (the serving contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "falcon-mamba-7b",
+                                  "zamba2-2.7b", "mixtral-8x7b"])
+def test_prefill_then_decode_matches_full_forward(arch):
+    from repro.serve.decode import make_prefill_step
+    import dataclasses
+    # exact-consistency test: pin the fp cache path (int8 quantization noise
+    # is covered separately in test_int8_kv.py)
+    cfg = dataclasses.replace(get_arch(arch).reduced(),
+                              kv_cache_dtype="bfloat16")
+    if cfg.moe is not None:
+        # capacity-dispatch drops are GROUP-SIZE dependent, so prefill(32)
+        # and forward(64) legitimately differ at cf=1.25; disable drops to
+        # test the cache contract itself
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=8.0))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    # both s0 and s0+extra must divide the SSM chunk (32 in reduced configs)
+    s0, extra = 32, 32
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (2, s0 + extra), np.int32))
+    batch = {"tokens": tok}
+    if cfg.embedding_frontend_stub:
+        emb = jnp.asarray(rng.standard_normal((2, s0 + extra, cfg.d_model),
+                                              np.float32))
+        batch["embeds"] = emb
+
+    # reference: full forward over s0+extra, logits at each position
+    hidden, _ = M.forward(params, cfg, batch, attn_impl="naive")
+    ref_logits = M.logits_from_hidden(cfg, params, hidden)
+
+    # prefill on s0 then decode the remaining tokens one at a time
+    pre_batch = {k: v[:, :s0] for k, v in batch.items()}
+    prefill = make_prefill_step(cfg, attn_impl="naive")
+    logits, cache = prefill(params, pre_batch)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(ref_logits[:, s0 - 1]),
+                               rtol=2e-2, atol=2e-2)
+    # grow the cache to full length for decode (prefill returns exactly s0)
+    cache_full = D.init_cache(cfg, 2, s0 + extra, dtype=jnp.float32)
+
+    def graft(dst, src):
+        if dst.ndim >= 4 and dst.shape[-2] != src.shape[-2] \
+                and dst.shape[:-2] == src.shape[:-2]:
+            pad = dst.shape[-2] - src.shape[-2]
+            return jnp.pad(src.astype(dst.dtype),
+                           [(0, 0)] * (src.ndim - 2) + [(0, pad), (0, 0)])
+        return src.astype(dst.dtype)
+
+    cache = jax.tree_util.tree_map(graft, cache_full, cache)
+    for t in range(extra):
+        pos = s0 + t
+        logits, cache = D.decode_step(params, cfg, cache, tok[:, pos],
+                                      jnp.asarray(pos, jnp.int32))
+        # decode_step consumed token at `pos`; its logits predict pos+1 and
+        # must match the full-forward logits at `pos`
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(ref_logits[:, pos]),
+                                   rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# train loop + checkpoint resume equivalence
+# ---------------------------------------------------------------------------
+
+def test_train_resume_matches_uninterrupted():
+    from repro.launch.train import train
+    with tempfile.TemporaryDirectory() as d:
+        full = train("qwen1.5-32b", steps=6, batch=2, seq=32,
+                     attn_impl="flash_jnp", log_every=100)
+        part = train("qwen1.5-32b", steps=4, batch=2, seq=32, ckpt_dir=d,
+                     ckpt_every=4, attn_impl="flash_jnp", log_every=100)
+        resumed = train("qwen1.5-32b", steps=6, batch=2, seq=32, ckpt_dir=d,
+                        resume=True, attn_impl="flash_jnp", log_every=100)
+    # the resumed run sees the same data (step-indexed pipeline) and state
+    np.testing.assert_allclose(resumed["final_loss"], full["final_loss"],
+                               rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE capacity dispatch sanity
+# ---------------------------------------------------------------------------
+
+def test_moe_matches_dense_at_high_capacity():
+    """With capacity >> tokens and top_k == E, MoE == mean of expert MLPs."""
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as MOE
+    from repro.models.layers import mlp_apply
+    key = jax.random.PRNGKey(0)
+    d, f, e = 32, 64, 2
+    cfg = MoEConfig(num_experts=e, top_k=e, capacity_factor=4.0)
+    ks = jax.random.split(key, 4)
+    p = {"router": jnp.zeros((d, e)),
+         "wi": jax.random.normal(ks[0], (e, d, f)) * 0.1,
+         "wg": jax.random.normal(ks[1], (e, d, f)) * 0.1,
+         "wo": jax.random.normal(ks[2], (e, f, d)) * 0.1}
+    x = jax.random.normal(ks[3], (1, 64, d))
+    out, aux = MOE.moe_apply(p, x, cfg, "silu_gated", group_size=64)
+    # router logits all equal -> every token goes to both experts, weight 1/2
+    dense = sum(
+        mlp_apply({"wi": p["wi"][i], "wg": p["wg"][i], "wo": p["wo"][i]},
+                  x, "silu_gated")
+        for i in range(e)) / e
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_drops_tokens_over_capacity():
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import capacity, combine_tensor
+    cfg = MoEConfig(num_experts=2, top_k=1, capacity_factor=1.0)
+    cap = capacity(cfg, 64)
+    # all 64 tokens choose expert 0 -> only `cap` survive
+    idx = jnp.zeros((1, 64, 1), jnp.int32)
+    w = jnp.ones((1, 64, 1))
+    comb = combine_tensor(idx, w, 2, cap)
+    kept = float((comb > 0).sum())
+    assert kept == cap
+
+
+# ---------------------------------------------------------------------------
+# sharding rules: divisibility invariant over every arch on a 16x16 mesh
+# ---------------------------------------------------------------------------
+
+def test_param_specs_divisibility_all_archs():
+    from jax.sharding import AbstractMesh
+    from repro.dist.sharding import param_specs
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.train_step import abstract_train_state
+    mesh = AbstractMesh((16, 16), ("data", "model"))
+    for name, cfg in ARCHS.items():
+        params_sds, _ = abstract_train_state(cfg, AdamWConfig())
+        specs = param_specs(cfg, params_sds, mesh)
+
+        def ok(path, leaf, spec):
+            for dim, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                size = mesh.shape[ax] if isinstance(ax, str) else \
+                    int(np.prod([mesh.shape[a] for a in ax]))
+                assert leaf.shape[dim] % size == 0, (name, path, leaf.shape,
+                                                     spec)
+        jax.tree_util.tree_map_with_path(
+            lambda p, l, s: ok(p, l, s), params_sds, specs)

@@ -1,0 +1,167 @@
+"""Per-kernel allclose tests: sweep shapes/dtypes against the ref.py oracles
+(interpret=True executes the Pallas kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_SHAPES = [
+    # (b, hq, hkv, sq, sk, d)
+    (2, 4, 2, 128, 128, 64),
+    (1, 8, 1, 256, 256, 32),
+    (2, 2, 2, 128, 384, 64),     # cross Sq != Sk
+    (1, 4, 4, 512, 512, 128),    # MHA, larger head dim
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(shape, dtype):
+    b, hq, hkv, sq, sk, d = shape
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), dtype)
+    out = ops.flash_attention(q, k, v, interpret=True)
+    ref = R.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 96, 128])
+def test_flash_attention_window(window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    out = ops.flash_attention(q, k, v, window=window, interpret=True)
+    ref = R.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("cap", [20.0, 50.0])
+def test_flash_attention_softcap(cap):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64)) * 3
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)) * 3
+    v = jax.random.normal(ks[2], (1, 2, 128, 64))
+    out = ops.flash_attention(q, k, v, logit_softcap=cap, interpret=True)
+    ref = R.flash_attention_ref(q, k, v, logit_softcap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_size_invariance():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    o1 = ops.flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    o2 = ops.flash_attention(q, k, v, block_q=128, block_k=256,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 256), (4, 96, 256), (2, 3, 5, 128),
+                                   (1000, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    sc = (jax.random.normal(ks[1], (shape[-1],)) * 0.1).astype(dtype)
+    out = ops.rmsnorm(x, sc, interpret=True)
+    ref = R.rmsnorm_ref(x, sc)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# mamba scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 64, 128, 16), (2, 128, 256, 16),
+                                   (2, 96, 128, 64)])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_mamba_scan(shape, chunk):
+    b, s, e, n = shape
+    ks = jax.random.split(KEY, 2)
+    a = jnp.exp(-jnp.abs(jax.random.normal(ks[0], shape)))
+    bb = jax.random.normal(ks[1], shape)
+    h_all, h_last = ops.mamba_scan(a, bb, chunk=chunk, interpret=True)
+    ra, rl = R.mamba_scan_ref(a, bb, jnp.zeros((b, e, n)))
+    np.testing.assert_allclose(np.asarray(h_all), np.asarray(ra),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(rl),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# moe grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("groups", [
+    (128, 256, 0, 128), (512, 0, 0, 0), (128, 128, 128, 128)])
+def test_moe_gmm(groups):
+    t = sum(groups)
+    d, f = 64, 128
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (t, d))
+    w = jax.random.normal(ks[1], (len(groups), d, f))
+    gs = jnp.array(groups, jnp.int32)
+    out = ops.moe_gmm(x, w, gs, interpret=True)
+    ref = R.moe_gmm_ref(x, w, gs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_gmm_bf16():
+    t, d, f, e = 256, 64, 128, 2
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (t, d), jnp.bfloat16)
+    w = jax.random.normal(ks[1], (e, d, f), jnp.bfloat16)
+    gs = jnp.array([128, 128], jnp.int32)
+    out = ops.moe_gmm(x, w, gs, interpret=True)
+    ref = R.moe_gmm_ref(x, w, gs)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# pallas attention inside the full model path
+# ---------------------------------------------------------------------------
+
+def test_model_forward_pallas_matches_naive():
+    from repro.configs.registry import get_arch
+    from repro.models import model as M
+    cfg = get_arch("llama3-405b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0, cfg.vocab)
+    batch = {"tokens": tok}
+    h1, _ = M.forward(params, cfg, batch, attn_impl="naive")
+    h2, _ = M.forward(params, cfg, batch, attn_impl="pallas")
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32),
+                               rtol=2e-3, atol=2e-3)

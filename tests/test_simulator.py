@@ -1,0 +1,105 @@
+"""Simulator invariants + fault tolerance."""
+import copy
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.scheduler import (
+    CGScheduler, MGBAlg2Scheduler, MGBAlg3Scheduler, SAScheduler,
+)
+from repro.core.simulator import Simulator
+from repro.core.task import Job, ResourceVector, Task, UnitTask
+
+GB = 1024**3
+
+
+def mk_job(name, mem_gb=2.0, demand=0.4, est=5.0, n_tasks=1):
+    tasks = []
+    for i in range(n_tasks):
+        vec = ResourceVector(hbm_bytes=int(mem_gb * GB), flops=1e12,
+                             bytes_accessed=1e9, est_seconds=est,
+                             core_demand=demand, bw_demand=demand)
+        tasks.append(Task(units=[UnitTask(
+            fn=None, memobjs=frozenset({f"{name}/{i}"}), resources=vec,
+            name=f"{name}.{i}")], name=f"{name}.{i}"))
+    return Job(tasks=tasks, name=name)
+
+
+def test_conservation_and_makespan_sa():
+    jobs = [mk_job(f"j{i}", est=5.0) for i in range(4)]
+    r = Simulator(SAScheduler(2), workers=2).run(jobs)
+    assert r.completed == 4 and r.crashed == 0
+    # 4 jobs x 5 s over 2 dedicated devices = 10 s (+ poll slack)
+    assert 9.9 <= r.makespan <= 10.6
+
+
+def test_sharing_beats_sa_for_low_demand():
+    jobs = [mk_job(f"j{i}", demand=0.2, est=5.0) for i in range(8)]
+    sa = Simulator(SAScheduler(2), workers=2).run(copy.deepcopy(jobs))
+    mgb = Simulator(MGBAlg3Scheduler(2), workers=8).run(copy.deepcopy(jobs))
+    assert mgb.makespan < sa.makespan / 1.8
+    assert mgb.completed == sa.completed == 8
+
+
+def test_oversubscription_dilates_wall_not_kernels():
+    jobs = [mk_job(f"j{i}", demand=0.6, est=10.0) for i in range(4)]
+    r = Simulator(MGBAlg3Scheduler(1), workers=4).run(jobs)
+    assert r.completed == 4
+    # 4 x 0.6 demand on one chip -> ~2.4x wall dilation
+    assert max(r.dilations.values()) > 1.8
+    # but per-kernel slowdown stays at the eta overhead (<3%)
+    assert max(r.slowdowns.values()) < 1.04
+
+
+def test_cg_crashes_jobs_memory_safe_do_not():
+    jobs = [mk_job(f"j{i}", mem_gb=9.0, est=5.0) for i in range(6)]
+    cg = Simulator(CGScheduler(2, ratio=3), workers=6).run(
+        copy.deepcopy(jobs))
+    assert cg.crashed > 0
+    for cls in (SAScheduler, MGBAlg2Scheduler, MGBAlg3Scheduler):
+        r = Simulator(cls(2), workers=6).run(copy.deepcopy(jobs))
+        assert r.crashed == 0 and r.completed == 6, cls.__name__
+
+
+def test_multi_task_jobs_run_in_order():
+    jobs = [mk_job("j0", n_tasks=3, est=2.0)]
+    r = Simulator(MGBAlg3Scheduler(2), workers=1).run(jobs)
+    assert r.completed == 1
+    t = jobs[0].tasks
+    assert t[0].finish_t <= t[1].start_t + 1e-9
+    assert t[1].finish_t <= t[2].start_t + 1e-9
+
+
+def test_failure_injection_reschedules():
+    jobs = [mk_job(f"j{i}", est=5.0, demand=0.3) for i in range(4)]
+    r = Simulator(MGBAlg3Scheduler(2), workers=4).run(
+        jobs, failure_at=(2.0, 0))
+    # all jobs complete despite losing a device mid-run
+    assert r.completed == 4 and r.crashed == 0
+    # everything after the failure ran on device 1
+    for j in jobs:
+        for t in j.tasks:
+            if t.start_t >= 2.0:
+                assert t.device == 1
+
+
+def test_infeasible_job_counted_crashed_not_livelocked():
+    jobs = [mk_job("big", mem_gb=20.0)]
+    r = Simulator(MGBAlg3Scheduler(1), workers=1).run(jobs)
+    assert r.crashed == 1 and r.completed == 0
+
+
+@given(n_jobs=st.integers(1, 12), demand=st.floats(0.05, 1.0),
+       workers=st.integers(1, 12))
+@settings(max_examples=30, deadline=None)
+def test_property_all_feasible_jobs_complete(n_jobs, demand, workers):
+    jobs = [mk_job(f"j{i}", mem_gb=3.0, demand=demand, est=2.0)
+            for i in range(n_jobs)]
+    r = Simulator(MGBAlg3Scheduler(2), workers=workers).run(jobs)
+    assert r.completed == n_jobs and r.crashed == 0
+    # a job can never finish faster than its solo estimate...
+    assert r.makespan >= 2.0 - 1e-9
+    # ...and the batch can never take longer than fully-serial + poll slack
+    assert r.makespan <= n_jobs * 2.0 * 1.2 + 1.0
+    assert max(r.device_busy) >= 2.0 - 1e-9

@@ -1,0 +1,180 @@
+"""Substrate tests: checkpoint, compression, straggler, interference, data
+pipeline determinism."""
+import os
+import tempfile
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import interference
+from repro.dist import compression as C
+from repro.train import checkpoint as CK
+from repro.train.straggler import StragglerDetector
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "b": jnp.zeros((4,), jnp.bfloat16)},
+            "step": jnp.int32(3)}
+
+
+def test_checkpoint_roundtrip():
+    s = _state()
+    with tempfile.TemporaryDirectory() as d:
+        CK.save(d, 10, s)
+        step, r = CK.restore(d, s)
+        assert step == 10
+        np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                      np.asarray(s["params"]["w"]))
+        assert r["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_restores_latest_committed():
+    s = _state()
+    with tempfile.TemporaryDirectory() as d:
+        CK.save(d, 1, s)
+        CK.save(d, 2, s)
+        # a torn write (no COMMITTED marker) must be ignored
+        os.makedirs(os.path.join(d, "step_00000099"))
+        assert CK.latest_step(d) == 2
+
+
+def test_checkpoint_prune_keeps_newest():
+    s = _state()
+    with tempfile.TemporaryDirectory() as d:
+        for i in range(5):
+            CK.save(d, i, s)
+        CK.prune(d, keep=2)
+        assert CK.latest_step(d) == 4
+        steps = [n for n in os.listdir(d) if n.startswith("step_")]
+        assert len(steps) == 2
+
+
+def test_async_checkpointer_overlap_and_backpressure():
+    s = _state()
+    with tempfile.TemporaryDirectory() as d:
+        ck = CK.AsyncCheckpointer(d, keep=2)
+        for i in range(3):
+            ck.save(i, s)
+        ck.wait()
+        assert ck.last_committed == 2
+        step, _ = CK.restore(d, s)
+        assert step == 2
+
+
+def test_checkpoint_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        CK.save(d, 1, {"w": jnp.zeros((4,))})
+        with pytest.raises(AssertionError):
+            CK.restore(d, {"w": jnp.zeros((5,))})
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_roundtrip_accuracy():
+    g = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+    q = C.compress_decompress(g)
+    cos = float(jnp.vdot(q, g) / (jnp.linalg.norm(q) * jnp.linalg.norm(g)))
+    assert cos > 0.999
+
+
+@given(seed=st.integers(0, 100), size=st.sampled_from([64, 300, 1024]))
+@settings(max_examples=20, deadline=None)
+def test_property_quantization_error_bounded(seed, size):
+    """Per-element error <= scale/2 = absmax/254 per block."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (size,))
+    q = C.compress_decompress(g)
+    err = np.abs(np.asarray(q - g))
+    bound = np.abs(np.asarray(g)).max() / 127.0
+    assert err.max() <= bound * 0.51 + 1e-7
+
+
+def test_error_feedback_telescopes():
+    """Sum of applied (compressed) grads + final error == sum of true grads."""
+    key = jax.random.PRNGKey(1)
+    g_total = jnp.zeros((512,))
+    applied = jnp.zeros((512,))
+    err = C.init_error_state({"g": g_total})["g"]
+    for i in range(10):
+        key, k = jax.random.split(key)
+        g = jax.random.normal(k, (512,))
+        g_total = g_total + g
+        q, err = C.apply_with_error_feedback({"g": g}, {"g": err})
+        q, err = q["g"], err["g"]
+        applied = applied + q
+    np.testing.assert_allclose(np.asarray(applied + err),
+                               np.asarray(g_total), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# straggler / interference
+# ---------------------------------------------------------------------------
+
+def test_straggler_detects_slow_host():
+    det = StragglerDetector(4, threshold=1.5)
+    for _ in range(10):
+        for h in range(4):
+            det.record_step(h, 2.0 if h == 1 else 1.0)
+    assert det.stragglers() == [1]
+
+
+def test_straggler_quiet_when_uniform():
+    det = StragglerDetector(3)
+    for _ in range(10):
+        for h in range(3):
+            det.record_step(h, 1.0 + 0.01 * h)
+    assert det.stragglers() == []
+
+
+def test_interference_single_resident_free():
+    assert interference.slowdown([(0.9, 0.9)]) == 1.0
+
+
+def test_interference_undersubscribed_cheap():
+    s = interference.slowdown([(0.3, 0.3), (0.3, 0.3)])
+    assert 1.0 <= s <= 1.02
+
+
+def test_interference_oversubscription_dilates():
+    s = interference.slowdown([(0.8, 0.2), (0.8, 0.2)])
+    assert s >= 1.6
+
+
+@given(st.lists(st.tuples(st.floats(0.01, 1.0), st.floats(0.01, 1.0)),
+                min_size=1, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_property_interference_monotone(demands):
+    """Adding a resident never speeds anyone up."""
+    s0 = interference.slowdown(demands)
+    s1 = interference.slowdown(demands + [(0.2, 0.2)])
+    assert s1 >= s0 - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism (fault-tolerance contract)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_restart_bit_identical():
+    from repro.configs.base import ShapeConfig
+    from repro.configs.registry import get_arch
+    from repro.data.pipeline import TokenPipeline
+    cfg = get_arch("gemma2-9b").reduced()
+    shape = ShapeConfig("t", 64, 4, "train")
+    p1 = TokenPipeline(cfg, shape, seed=7)
+    batches = [p1.batch_at(i) for i in range(5)]
+    p2 = TokenPipeline(cfg, shape, seed=7, start_step=3)
+    np.testing.assert_array_equal(p2.batch_at(3)["tokens"],
+                                  batches[3]["tokens"])
+    np.testing.assert_array_equal(p2.batch_at(4)["labels"],
+                                  batches[4]["labels"])
