@@ -13,6 +13,7 @@ device is never selected and its residents re-enter the queue).
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 from typing import Dict, List, Optional, Sequence
 
@@ -20,6 +21,17 @@ from repro.core.task import Task
 
 # 16 GB v5e HBM per chip (the paper's P100/V100 also had 16 GB)
 DEFAULT_HBM = 16 * 1024**3
+
+# Per-chip compute slots (Alg. 2's per-SM TB/warp table analogue). Lives here
+# rather than in mgb.py so DeviceState can maintain the in-use slot count
+# incrementally on admit/release.
+SLOTS = 16
+
+
+def slots_needed(task: Task) -> int:
+    """Compute slots a task occupies while resident (>= 1 even at demand 0:
+    a resident kernel always holds an issue slot)."""
+    return max(1, math.ceil(task.resources.demand * SLOTS))
 
 
 @dataclasses.dataclass
@@ -29,6 +41,10 @@ class DeviceState:
     used_hbm: int = 0
     alive: bool = True
     residents: Dict[int, Task] = dataclasses.field(default_factory=dict)
+    # in-use compute slots, maintained incrementally on admit/release so the
+    # MGB Alg. 2 feasibility check is O(1) per candidate device instead of
+    # O(residents) (it runs once per device per placement attempt)
+    used_slots: int = 0
 
     @property
     def free_hbm(self) -> int:
@@ -45,12 +61,14 @@ class DeviceState:
 
     def admit(self, task: Task) -> None:
         self.used_hbm += task.resources.hbm_bytes
+        self.used_slots += slots_needed(task)
         self.residents[task.uid] = task
 
     def release(self, task: Task) -> None:
         if task.uid in self.residents:
             del self.residents[task.uid]
             self.used_hbm -= task.resources.hbm_bytes
+            self.used_slots -= slots_needed(task)
 
     def oom(self) -> bool:
         return self.used_hbm > self.total_hbm

@@ -14,13 +14,12 @@ cost of <1% extra kernel slowdown.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
-from repro.core.scheduler.base import DeviceState, Scheduler
+from repro.core.scheduler.base import (
+    SLOTS, DeviceState, Scheduler, slots_needed,
+)
 from repro.core.task import Task
-
-SLOTS = 16   # per-chip compute slots (Alg. 2's per-SM TB/warp table analogue)
 
 
 class MGBAlg2Scheduler(Scheduler):
@@ -28,21 +27,15 @@ class MGBAlg2Scheduler(Scheduler):
 
     name = "MGB-Alg2"
 
-    def _slots_needed(self, task: Task) -> int:
-        return max(1, math.ceil(task.resources.demand * SLOTS))
-
-    def _slots_used(self, dev: DeviceState) -> int:
-        return sum(max(1, math.ceil(t.resources.demand * SLOTS))
-                   for t in dev.residents.values())
-
     def select_device(self, task: Task) -> Optional[DeviceState]:
-        need = self._slots_needed(task)
+        need = slots_needed(task)
         for dev in self.devices:
             if not dev.alive:
                 continue
             if task.resources.hbm_bytes > dev.free_hbm:
                 continue  # memory: hard
-            if self._slots_used(dev) + need > SLOTS:
+            # dev.used_slots is maintained on admit/release: O(1) per device
+            if dev.used_slots + need > SLOTS:
                 continue  # compute: hard (paper: TBs failed to place)
             return dev
         return None

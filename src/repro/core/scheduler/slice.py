@@ -19,7 +19,7 @@ import math
 import threading
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.scheduler.base import DEFAULT_HBM, DeviceState
+from repro.core.scheduler.base import DEFAULT_HBM, DeviceState, slots_needed
 from repro.core.task import Task
 
 
@@ -110,7 +110,10 @@ class SliceScheduler:
                 return None
             for cell in rect.cells():
                 dev = self.chips[cell]
+                # not DeviceState.admit(): a slice task charges each chip its
+                # per-chip share, not the whole-task footprint
                 dev.used_hbm += per_chip
+                dev.used_slots += slots_needed(task)
                 dev.residents[task.uid] = task
             self.bound[task.uid] = rect
             task.device = rect.pod * self.rows * self.cols \
@@ -128,6 +131,7 @@ class SliceScheduler:
                 if task.uid in dev.residents:
                     del dev.residents[task.uid]
                     dev.used_hbm -= per_chip
+                    dev.used_slots -= slots_needed(task)
 
     def mark_dead(self, cell: Tuple[int, int, int]) -> List[Task]:
         """Fail one chip: every slice-task overlapping it is evicted whole."""
@@ -149,6 +153,7 @@ class SliceScheduler:
                         if uid in d.residents:
                             del d.residents[uid]
                             d.used_hbm -= per_chip
+                            d.used_slots -= slots_needed(task)
                     del self.bound[uid]
                     task.device = None
                     evicted.append(task)

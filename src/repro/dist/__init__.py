@@ -1,0 +1,15 @@
+"""Distribution substrate: sharding rules, gradient compression, pipeline
+parallelism.
+
+The model/train/launch layers import these to turn single-device step
+functions into multi-device GSPMD programs — the genuinely multi-chip tasks
+(``ResourceVector.chips > 1``) the paper's schedulers place.
+
+  * ``repro.dist.sharding``    — logical-axis activation constraints and
+    divisibility-aware parameter/batch/cache PartitionSpecs.
+  * ``repro.dist.compression`` — blockwise int8 gradient compression with
+    error feedback.
+  * ``repro.dist.pipeline``    — GPipe-style microbatch pipeline over a
+    ``stage`` mesh axis.
+"""
+from repro.dist import compression, pipeline, sharding  # noqa: F401

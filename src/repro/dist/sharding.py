@@ -1,0 +1,239 @@
+"""Sharding rules: logical-axis activation constraints plus divisibility-aware
+parameter / batch / cache PartitionSpecs.
+
+Two logical activation axes cover every model in this repo:
+
+  * ``batch`` — the mesh's data axes (``("pod", "data")`` when a DCN pod axis
+    is present, else ``("data",)``): batch / FSDP parallelism.
+  * ``model`` — the ``model`` mesh axis: tensor / expert / sequence
+    parallelism.
+
+``constrain`` is the one entry point model code uses to pin activation
+shardings (each call site documents the memory pathology it prevents). It is
+a no-op unless an ``activation_mesh`` context is active, so the same model
+code runs unsharded in single-device tests.
+
+Every rule is DIVISIBILITY-AWARE: a mesh axis whose size does not divide the
+corresponding dim is dropped (that dim stays replicated) instead of erroring.
+One rule table therefore covers both a 2-kv-head reduced config and a
+128-head production config on the same 16x16 mesh
+(tests/test_integration.py::test_param_specs_divisibility_all_archs).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+_ACTIVE = threading.local()
+
+
+def current_mesh():
+    """The mesh installed by ``activation_mesh`` (None outside any context)."""
+    return getattr(_ACTIVE, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh):
+    """Install ``mesh`` as the target of ``constrain`` for the dynamic extent.
+
+    The launch drivers wrap init + jit tracing in this context; model code
+    stays mesh-agnostic and calls ``constrain`` unconditionally.
+    """
+    prev = getattr(_ACTIVE, "mesh", None)
+    _ACTIVE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.mesh = prev
+
+
+# ---------------------------------------------------------------------------
+# logical -> mesh axis resolution
+# ---------------------------------------------------------------------------
+
+def _axis_group(mesh, logical: Optional[str]) -> Optional[Tuple[str, ...]]:
+    """Resolve a logical axis name to a tuple of mesh axes (None = replicate)."""
+    if logical is None:
+        return None
+    names = mesh.axis_names
+    if logical == "batch":
+        group = tuple(a for a in ("pod", "data") if a in names)
+        return group or None
+    if logical in names:
+        return (logical,)
+    return None
+
+
+def _group_size(mesh, group: Tuple[str, ...]) -> int:
+    size = 1
+    for a in group:
+        size *= mesh.shape[a]
+    return size
+
+
+def _entry(mesh, dim: int, logical) -> Any:
+    """One PartitionSpec entry for a dim of size ``dim``, or None if the axis
+    group's size does not divide it (replicate rather than error)."""
+    group = _axis_group(mesh, logical)
+    if group is None or dim % _group_size(mesh, group):
+        return None
+    return group[0] if len(group) == 1 else group
+
+
+def _spec_for(mesh, shape: Sequence[int], logical_axes: Sequence) -> P:
+    entries = [_entry(mesh, d, ax) for d, ax in zip(shape, logical_axes)]
+    entries += [None] * (len(shape) - len(entries))
+    return P(*entries)
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """``with_sharding_constraint`` under the active activation mesh.
+
+    ``logical_axes`` has one entry per dim of ``x``: "batch", "model", any
+    literal mesh axis name, or None. Outside an ``activation_mesh`` context
+    (or on a trivial 1-device mesh) this is the identity, so model code can
+    pin shardings unconditionally.
+    """
+    mesh = current_mesh()
+    if mesh is None or mesh.size == 1:
+        return x
+    spec = _spec_for(mesh, x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+# Rules are written for the UNSTACKED param rank and aligned to the trailing
+# dims; leading layer/group stack dims stay replicated. "data" = FSDP axis,
+# "model" = tensor/expert-parallel axis.
+_PARAM_RULES = {
+    # top level
+    ("", "embed"): ("model", "data"),          # [V, d]: vocab-parallel
+    ("", "lm_head"): ("data", "model"),        # [d, V]
+    # attention (Megatron TP: heads on model, d_model FSDP on data)
+    ("attn", "wq"): ("data", "model", None),   # [d, H, hd]
+    ("attn", "wk"): ("data", "model", None),   # [d, Hkv, hd]
+    ("attn", "wv"): ("data", "model", None),
+    ("attn", "wo"): ("model", None, "data"),   # [H, hd, d]
+    ("attn", "bq"): ("model", None),
+    ("attn", "bk"): ("model", None),
+    ("attn", "bv"): ("model", None),
+    # dense MLP (column- then row-parallel)
+    ("mlp", "wi"): ("data", "model"),          # [d, f]
+    ("mlp", "wg"): ("data", "model"),
+    ("mlp", "wo"): ("model", "data"),          # [f, d]
+    # MoE (expert-parallel on model when E divides it; FSDP on d)
+    ("moe", "router"): ("data", None),         # [d, E]
+    ("moe", "wi"): ("model", "data", None),    # [E, d, f]
+    ("moe", "wg"): ("model", "data", None),
+    ("moe", "wo"): ("model", None, "data"),    # [E, f, d]
+    # Mamba blocks: the expanded channel dim e plays the TP role
+    ("mamba", "in_proj"): ("data", "model"),   # [d, 2e(+...)]
+    ("mamba", "conv_w"): ("model", None),      # [e(+2n), W]
+    ("mamba", "conv_b"): ("model",),
+    ("mamba", "x_proj"): ("model", None),      # [e, r+2n]
+    ("mamba", "dt_proj_w"): (None, "model"),   # [r, e]
+    ("mamba", "dt_proj_b"): ("model",),
+    ("mamba", "out_proj"): ("model", "data"),  # [e, d]
+    # A_log / D / dt_bias / norm: small state tensors, replicated
+}
+
+_PARENTS = frozenset(p for p, _ in _PARAM_RULES if p)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        names.append(getattr(k, "key", getattr(k, "name", str(k))))
+    return tuple(names)
+
+
+def _param_rule(path) -> Optional[Tuple]:
+    names = _path_names(path)
+    name = names[-1]
+    parent = next((n for n in reversed(names[:-1]) if n in _PARENTS), "")
+    return _PARAM_RULES.get((parent, name)) or _PARAM_RULES.get(("", name))
+
+
+def param_specs(cfg: ArchConfig, params, mesh):
+    """PartitionSpec tree (FSDP + TP) for a param tree of arrays or
+    ShapeDtypeStructs. Optimizer moments reuse these specs unchanged."""
+
+    def leaf_spec(path, leaf):
+        rule = _param_rule(path)
+        if rule is None or leaf.ndim < len(rule):
+            return P()
+        lead = leaf.ndim - len(rule)
+        logical = (None,) * lead + tuple(rule)
+        return _spec_for(mesh, leaf.shape, logical)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, batch, mesh):
+    """Shard every input's leading (batch) dim over the data axes; scalars
+    (e.g. decode ``pos``) stay replicated."""
+
+    def leaf_spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        logical = ("batch",) + (None,) * (leaf.ndim - 1)
+        return _spec_for(mesh, leaf.shape, logical)
+
+    return jax.tree_util.tree_map(leaf_spec, batch)
+
+
+# Cache layouts (repro.models.decode.init_cache), keyed by leaf name:
+#   k/v     [L|G, B, Hkv, S, hd]     k_s/v_s [L, B, Hkv, S]
+#   conv    [L, B, W-1, e]           ssm     [L, B, e, N]
+#   m_conv  [G, k-1, B, W-1, e+2n]   m_ssm   [G, k-1, B, nh, hd, N]
+# ``context_parallel`` moves the data axes onto the sequence dim for
+# small-batch long-context decode (global_batch < data-axis size).
+_CACHE_RULES = {
+    "k": (None, "batch", "model", None, None),
+    "v": (None, "batch", "model", None, None),
+    "k_s": (None, "batch", "model", None),
+    "v_s": (None, "batch", "model", None),
+    "conv": (None, "batch", None, "model"),
+    "ssm": (None, "batch", "model", None),
+    "m_conv": (None, None, "batch", None, "model"),
+    "m_ssm": (None, None, "batch", "model", None, None),
+}
+_CACHE_SEQ_DIM = {"k": 3, "v": 3, "k_s": 3, "v_s": 3}
+
+
+def cache_specs(cfg: ArchConfig, cache, mesh, *, context_parallel: bool = False):
+    """PartitionSpecs for a decode/prefill cache tree."""
+
+    def leaf_spec(path, leaf):
+        name = _path_names(path)[-1]
+        rule = _CACHE_RULES.get(name)
+        if rule is None or leaf.ndim != len(rule):
+            return P()
+        logical = list(rule)
+        if context_parallel and name in _CACHE_SEQ_DIM:
+            # batch too small to shard: put the data axes on the sequence dim
+            logical[1] = None
+            logical[_CACHE_SEQ_DIM[name]] = "batch"
+        return _spec_for(mesh, leaf.shape, logical)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def to_named(specs, mesh):
+    """PartitionSpec tree -> NamedSharding tree (P is a tuple: need is_leaf)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

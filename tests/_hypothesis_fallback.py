@@ -1,0 +1,96 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+``hypothesis`` is a test-extra (pyproject ``[test]``), not a runtime
+dependency; test collection must never hard-fail when it is absent. Modules
+do ``from _hypothesis_fallback import given, settings, st``: when hypothesis
+is installed they get the real thing, otherwise a tiny deterministic stand-in
+that still RUNS each property test against ``max_examples`` seeded
+pseudo-random examples (weaker than hypothesis — no shrinking, no coverage
+guidance — but far better than skipping the module).
+
+The fallback covers exactly the API surface this suite uses: ``given`` /
+``settings`` and the strategies integers, floats, booleans, sampled_from,
+lists, sets, tuples.
+"""
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda r: [elements.draw(r) for _ in
+                                        range(r.randint(min_size, max_size))])
+
+        @staticmethod
+        def sets(elements, min_size=0, max_size=10):
+            def draw(r):
+                out = set()
+                target = r.randint(min_size, max_size)
+                for _ in range(100 * (target + 1)):
+                    if len(out) >= target:
+                        break
+                    out.add(elements.draw(r))
+                return out
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(lambda r: tuple(e.draw(r) for e in elements))
+
+    st = _Strategies()
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # No functools.wraps: the wrapper must expose a ZERO-arg
+            # signature or pytest would treat the strategy params as
+            # fixtures.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                for i in range(n):
+                    rng = random.Random(f"{fn.__name__}:{i}")
+                    args = [s.draw(rng) for s in arg_strategies]
+                    kwargs = {k: s.draw(rng)
+                              for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, **kwargs)
+                    except BaseException as e:
+                        e.args = (f"falsifying example #{i}: args={args!r} "
+                                  f"kwargs={kwargs!r}: {e}",) + e.args[1:] \
+                            if e.args else (f"example #{i}",)
+                        raise
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = getattr(fn, "_max_examples", 20)
+            return wrapper
+        return deco

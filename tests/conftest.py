@@ -1,0 +1,14 @@
+"""Make ``repro`` importable without an editable install.
+
+The tier-1 command exports PYTHONPATH=src, but a plain ``pytest`` from the
+repo root (or an IDE runner) must work too, so insert src/ ahead of
+site-packages. A properly installed ``repro`` still wins nothing here —
+src/ simply shadows it, which is what a source checkout should do.
+"""
+import os
+import sys
+
+_SRC = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

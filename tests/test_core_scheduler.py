@@ -1,7 +1,6 @@
 """Unit + property tests for the paper's schedulers and task framework."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_fallback import given, settings, st
 
 from repro.core.scheduler import (
     CGScheduler, MemOnlyScheduler, MGBAlg2Scheduler, MGBAlg3Scheduler,

@@ -1,12 +1,11 @@
 """int8 KV-cache tests (beyond-paper feature, EXPERIMENTS.md §Perf P10)."""
 import dataclasses
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_fallback import given, settings, st
 
 from repro.configs.registry import get_arch
 from repro.models import decode as D

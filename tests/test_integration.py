@@ -203,7 +203,10 @@ def test_param_specs_divisibility_all_archs():
     from repro.dist.sharding import param_specs
     from repro.optim.adamw import AdamWConfig
     from repro.train.train_step import abstract_train_state
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    try:
+        mesh = AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:  # jax <= 0.4.x: AbstractMesh(((name, size), ...))
+        mesh = AbstractMesh((("data", 16), ("model", 16)))
     for name, cfg in ARCHS.items():
         params_sds, _ = abstract_train_state(cfg, AdamWConfig())
         specs = param_specs(cfg, params_sds, mesh)

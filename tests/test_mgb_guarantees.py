@@ -1,0 +1,134 @@
+"""Regression tests for the MGB schedulers' memory-hard guarantee.
+
+The paper's central safety property: a task is NEVER placed on a device that
+cannot hold its declared peak memory, so co-scheduled jobs cannot OOM each
+other. Alg. 2 additionally treats compute slots as a hard constraint. These
+tests drive both schedulers through a deterministic random begin/end stream
+and check the invariants after every event, including the demand boundary
+cases 0 and 1.0, and cross-check the O(1) ``DeviceState.used_slots`` cache
+against a recount.
+"""
+import random
+
+from repro.core.scheduler import MGBAlg2Scheduler, MGBAlg3Scheduler
+from repro.core.scheduler.base import SLOTS, slots_needed
+from repro.core.task import ResourceVector, Task, UnitTask
+
+GB = 1024**3
+
+
+def _task(mem_bytes, demand, name="", chips=1):
+    vec = ResourceVector(hbm_bytes=int(mem_bytes), flops=1e9,
+                         bytes_accessed=1e9, est_seconds=0.01,
+                         core_demand=demand, bw_demand=demand, chips=chips)
+    return Task(units=[UnitTask(fn=None, memobjs=frozenset(), resources=vec,
+                                name=name)], name=name)
+
+
+def _assert_invariants(sched, *, slots_hard):
+    for dev in sched.devices:
+        assert dev.used_hbm <= dev.total_hbm, \
+            f"device {dev.index} oversubscribed: {dev.used_hbm}"
+        assert dev.used_hbm >= 0 and dev.used_slots >= 0
+        recount = sum(slots_needed(t) for t in dev.residents.values())
+        assert dev.used_slots == recount, \
+            f"used_slots cache diverged: {dev.used_slots} != {recount}"
+        if slots_hard:
+            assert dev.used_slots <= SLOTS, \
+                f"Alg2 oversubscribed slots: {dev.used_slots}"
+
+
+def _run_stream(sched, *, slots_hard, seed=0, events=400):
+    rng = random.Random(seed)
+    resident = []
+    for _ in range(events):
+        if resident and rng.random() < 0.4:
+            sched.task_end(resident.pop(rng.randrange(len(resident))))
+        else:
+            demand = rng.choice([0.0, 0.05, 0.25, 0.5, 0.75, 1.0])
+            t = _task(rng.uniform(0.25, 12.0) * GB, demand)
+            free_before = {d.index: d.free_hbm for d in sched.devices}
+            dev = sched.task_begin(t)
+            if dev is not None:
+                # placement respected the pre-admission free memory
+                assert t.resources.hbm_bytes <= free_before[dev]
+                resident.append(t)
+        _assert_invariants(sched, slots_hard=slots_hard)
+    for t in resident:
+        sched.task_end(t)
+    _assert_invariants(sched, slots_hard=slots_hard)
+    for dev in sched.devices:
+        assert dev.used_hbm == 0 and dev.used_slots == 0
+
+
+def test_alg2_memory_and_slots_hard_under_churn():
+    _run_stream(MGBAlg2Scheduler(4), slots_hard=True)
+
+
+def test_alg3_memory_hard_under_churn():
+    _run_stream(MGBAlg3Scheduler(4), slots_hard=False)
+
+
+def test_alg2_zero_demand_still_occupies_one_slot():
+    sched = MGBAlg2Scheduler(2)
+    placed = [sched.task_begin(_task(GB, 0.0)) for _ in range(2 * SLOTS)]
+    assert None not in placed  # 16 issue slots per device, 2 devices
+    assert all(d.used_slots == SLOTS for d in sched.devices)
+    # every slot is held: one more zero-demand task must wait
+    assert sched.task_begin(_task(GB, 0.0)) is None
+
+
+def test_alg2_full_demand_gets_device_exclusively():
+    sched = MGBAlg2Scheduler(1)
+    big = _task(GB, 1.0)
+    assert sched.task_begin(big) == 0
+    assert sched.devices[0].used_slots == SLOTS
+    # compute-exclusive: even an epsilon task cannot co-place...
+    assert sched.task_begin(_task(GB, 0.05)) is None
+    sched.task_end(big)
+    # ...but fits immediately once the resident leaves
+    assert sched.task_begin(_task(GB, 0.05)) == 0
+
+
+def test_alg3_rejects_on_memory_even_when_idle():
+    sched = MGBAlg3Scheduler(2)
+    assert sched.task_begin(_task(17 * GB, 0.0)) is None  # > 16 GB HBM
+    half = _task(9 * GB, 0.0)
+    assert sched.task_begin(half) is not None
+    # 9 + 9 > 16: second task must land on the OTHER device
+    other = _task(9 * GB, 0.0)
+    assert sched.task_begin(other) not in (None, half.device)
+    # a third 9 GB task fits nowhere, regardless of zero compute demand
+    assert sched.task_begin(_task(9 * GB, 0.0)) is None
+
+
+def test_slice_scheduler_maintains_slot_cache():
+    """SliceScheduler bypasses DeviceState.admit (per-chip memory charging),
+    so it must maintain the used_slots cache itself on all three paths."""
+    from repro.core.scheduler import SliceScheduler
+    sched = SliceScheduler(pods=1, rows=4, cols=4)
+    t = _task(4 * GB, 0.5, chips=4)
+    rect = sched.task_begin(t)
+    assert rect is not None and rect.chips == 4
+    for cell in rect.cells():
+        dev = sched.chips[cell]
+        assert dev.used_slots == slots_needed(t) > 0
+    sched.task_end(t)
+    assert all(d.used_slots == 0 and d.used_hbm == 0
+               for d in sched.chips.values())
+    # eviction path (chip failure) must release slots on every slice cell
+    t2 = _task(4 * GB, 1.0, chips=4)
+    rect2 = sched.task_begin(t2)
+    evicted = sched.mark_dead(next(iter(rect2.cells())))
+    assert evicted == [t2]
+    assert all(d.used_slots == 0 and d.used_hbm == 0
+               for d in sched.chips.values())
+
+
+def test_alg3_oversubscribes_compute_but_never_memory():
+    sched = MGBAlg3Scheduler(1)
+    tasks = [_task(GB, 1.0) for _ in range(4)]
+    for t in tasks:  # compute is soft: all four co-resident at demand 1.0
+        assert sched.task_begin(t) == 0
+    assert sched.devices[0].used_hbm == 4 * GB
+    assert sched.task_begin(_task(13 * GB, 0.0)) is None  # memory stays hard

@@ -1,9 +1,8 @@
 """Simulator invariants + fault tolerance."""
 import copy
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_fallback import given, settings, st
 
 from repro.core.scheduler import (
     CGScheduler, MGBAlg2Scheduler, MGBAlg3Scheduler, SAScheduler,

@@ -3,12 +3,11 @@ pipeline determinism."""
 import os
 import tempfile
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_fallback import given, settings, st
 
 from repro.core import interference
 from repro.dist import compression as C
