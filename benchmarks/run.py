@@ -9,8 +9,8 @@ import argparse
 import time
 
 from benchmarks import (
-    fig4_alg2_vs_alg3, fig5_throughput, fig6_nn_schedgpu, kernels_bench,
-    table2_crashes, table3_turnaround, table4_slowdown,
+    bench_executor, fig4_alg2_vs_alg3, fig5_throughput, fig6_nn_schedgpu,
+    kernels_bench, table2_crashes, table3_turnaround, table4_slowdown,
 )
 
 EXPERIMENTS = {
@@ -21,6 +21,7 @@ EXPERIMENTS = {
     "table4": table4_slowdown.run,
     "fig6": fig6_nn_schedgpu.run,
     "kernels": kernels_bench.run,
+    "executor": bench_executor.run,
 }
 
 

@@ -1,8 +1,10 @@
 """Scenario: a shared multi-accelerator node running a mixed batch of REAL
 model workloads (train steps, prefill, decode) from independent "users" under
 the paper's scheduler — the full compiler-guided pipeline with live JAX
-execution, plus a mid-run device failure to exercise the fault-tolerance
-path.
+execution through the event-driven executor (blocked jobs hold no thread;
+completions wake the waiter queue), plus a mid-run device failure to exercise
+the fault-tolerance path and a decode fleet far larger than the execution
+pool.
 
     PYTHONPATH=src python examples/shared_cluster.py
 """
@@ -133,6 +135,41 @@ def main():
     print(f"completed={stats3['completed']} crashed={stats3['crashed']} "
           f"(all work landed on the surviving device)")
     assert stats3["completed"] + stats3["crashed"] == len(jobs3)
+
+    print("\n-- decode fleet: 64 queued decode tasks, execution pool of 2 --")
+    # the serving-scale path: every request is a task; blocked requests park
+    # in the scheduler's waiter queue (no thread each) and completions wake
+    # the next admission. One jitted prefill is shared by the whole fleet.
+    cfg = get_arch("zamba2-2.7b").reduced()
+    prefill = jax.jit(make_prefill_step(cfg, attn_impl="flash_jnp"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32), np.int32))
+    fleet_batch = {"tokens": tok}
+    if cfg.embedding_frontend_stub:
+        fleet_batch["embeds"] = jnp.asarray(
+            rng.standard_normal((2, 32, cfg.d_model), np.float32))
+    vec = probe_fn(prefill, params, fleet_batch)
+
+    def decode_runner(device):
+        logits, _ = prefill(params, fleet_batch)
+        jax.block_until_ready(logits)
+
+    fleet = []
+    for i in range(64):
+        name = f"decode-{i}"
+        unit = UnitTask(fn=None, memobjs=frozenset({name}), resources=vec,
+                        name=name)
+        fleet.append(ExecJob(
+            job=Job(tasks=[Task(units=[unit], name=name)], name=name),
+            runners=[decode_runner]))
+    sched4 = MGBAlg3Scheduler(num_devices=2)
+    t0 = time.time()
+    stats4 = Executor(sched4, workers=2).run(fleet)
+    print(f"completed={stats4['completed']}/64 in {time.time() - t0:.2f}s "
+          f"with 2 pool threads "
+          f"({stats4['sched_attempts']} admission attempts)")
+    assert stats4["completed"] == 64
     print("\nshared_cluster OK")
 
 

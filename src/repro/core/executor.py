@@ -1,6 +1,23 @@
-"""Live executor: a worker pool running REAL jitted JAX computations under a
-scheduler — the end-to-end path probe -> task_begin -> lazy bind -> launch ->
-task_end (paper §IV prototype, minus MPS which has no TPU analogue).
+"""Live executor: an event-driven engine running REAL jitted JAX computations
+under a scheduler — the end-to-end path probe -> admit/enqueue -> wakeup ->
+lazy bind -> launch -> release (paper §IV prototype, minus MPS which has no
+TPU analogue).
+
+Engine shape (the paper's daemon, in-process):
+
+  * a single **dispatcher** owns the pending work: each job submits its next
+    task via ``Scheduler.admit_or_enqueue`` — a blocked task holds NO thread,
+    it sits in the scheduler's FIFO waiter queue;
+  * every ``task_end`` re-drives admission (the paper's *notify*), and the
+    admission callback pushes the (task, device) pair onto a **bounded
+    execution pool** sized to the device count, not the job count;
+  * completion callbacks advance the owning job to its next task (or finish
+    it), so thousands of queued jobs need only ``workers`` threads.
+
+``PollingExecutor`` preserves the previous worker-pool protocol — one thread
+per in-flight job spinning ``task_begin`` in a sleep(poll) loop — as the
+baseline ``benchmarks/bench_executor.py`` measures the event-driven engine
+against.
 
 On this CPU-only container jax exposes one device, so the executor virtualizes
 ``num_devices`` logical devices over it: placement, memory accounting and
@@ -48,15 +65,38 @@ class ExecJob:
     buffers: Dict[str, lazy.LazyBuffer] = dataclasses.field(default_factory=dict)
 
 
+def _empty_stats() -> Dict[str, float]:
+    return {"makespan_s": 0.0, "throughput_jobs_per_s": 0.0,
+            "completed": 0, "crashed": 0, "mean_turnaround_s": 0.0,
+            "sched_attempts": 0}
+
+
+@dataclasses.dataclass
+class _JobRun:
+    """Dispatcher-side job state: which task is next, when it was queued."""
+    ej: ExecJob
+    next_task: int = 0
+    t_queue: float = 0.0
+
+
+@dataclasses.dataclass
+class _Ready:
+    """An admitted task waiting for an execution-pool thread."""
+    jr: _JobRun
+    task_idx: int
+    device: int
+    epoch: int
+
+
 class Executor:
-    """Worker-pool executor mirroring the paper's batch protocol."""
+    """Event-driven executor: admission wakeups, bounded execution pool."""
 
     def __init__(self, scheduler: Scheduler, *, workers: int,
                  devices: Optional[Sequence[object]] = None,
                  poll_interval: float = 0.002):
         self.sched = scheduler
         self.workers = workers
-        self.poll = poll_interval
+        self.poll = poll_interval  # kept for API compat (PollingExecutor uses it)
         n = len(scheduler.devices)
         real = list(devices) if devices is not None else list(jax.devices())
         # virtual device i -> a real jax device (round-robin over whatever
@@ -65,31 +105,135 @@ class Executor:
         self.records: List[ExecRecord] = []
         self._rec_lock = threading.Lock()
 
+    # -- engine -------------------------------------------------------------
     def run(self, jobs: Sequence[ExecJob]) -> Dict[str, float]:
-        q: "queue_mod.Queue[ExecJob]" = queue_mod.Queue()
-        for j in jobs:
-            j.job.arrival_t = time.monotonic()
-            q.put(j)
-        stop = threading.Event()
+        if not jobs:
+            return _empty_stats()
+        attempts0 = getattr(self.sched, "begin_attempts", 0)
+        ready: "queue_mod.Queue[Optional[_Ready]]" = queue_mod.Queue()
+        state_lock = threading.Lock()
+        all_done = threading.Event()
+        remaining = [len(jobs)]
 
-        def worker(_wid: int) -> None:
-            while not stop.is_set():
-                try:
-                    ej = q.get_nowait()
-                except queue_mod.Empty:
+        def finish(jr: _JobRun, *, crashed: bool) -> None:
+            jr.ej.job.crashed = jr.ej.job.crashed or crashed
+            jr.ej.job.finish_t = time.monotonic()
+            lazy.free_all(jr.ej.buffers)
+            with state_lock:
+                remaining[0] -= 1
+                if remaining[0] == 0:
+                    all_done.set()
+
+        def submit_next(jr: _JobRun) -> None:
+            idx = jr.next_task
+            task = jr.ej.job.tasks[idx]
+            jr.t_queue = time.monotonic()
+            if not self.sched.can_ever_fit(task):
+                # never feasible on any alive device: crash-at-submit instead
+                # of waiting forever in the queue
+                now = time.monotonic()
+                with self._rec_lock:
+                    self.records.append(ExecRecord(
+                        jr.ej.job.name, task.name, -1, jr.t_queue, now, now,
+                        crashed=True))
+                finish(jr, crashed=True)
+                return
+
+            def on_admit(t: Task, device: Optional[int], epoch: int,
+                         jr=jr, idx=idx) -> None:
+                # fires under task_end/notify of *another* task (or inline on
+                # immediate admission): just hand off to the execution pool.
+                # device None = the fleet shrank to where this task can never
+                # run (mark_dead sweep): crash the job instead of waiting
+                if device is None:
+                    now = time.monotonic()
+                    with self._rec_lock:
+                        self.records.append(ExecRecord(
+                            jr.ej.job.name, t.name, -1, jr.t_queue, now, now,
+                            crashed=True))
+                    finish(jr, crashed=True)
                     return
-                try:
-                    self._run_job(ej)
-                except OOMError:
-                    ej.job.crashed = True
-                ej.job.finish_t = time.monotonic()
+                ready.put(_Ready(jr, idx, device, epoch))
 
-        threads = [threading.Thread(target=worker, args=(i,))
-                   for i in range(self.workers)]
+            self.sched.admit_or_enqueue(task, on_admit)
+
+        def execute(item: _Ready) -> None:
+            jr, task = item.jr, item.jr.ej.job.tasks[item.task_idx]
+            dev_idx = item.device
+            # evicted while queued for the pool (device died): the re-admitted
+            # incarnation owns this task now — drop the stale work item
+            if self.sched.admission_epoch(task) != item.epoch:
+                return
+            # memory-unsafe scheduler may have oversubscribed: OOM crash
+            if self.sched.devices[dev_idx].oom():
+                if not self.sched.task_end(task, epoch=item.epoch):
+                    return  # fenced: evicted + re-admitted elsewhere mid-check
+                now = time.monotonic()
+                with self._rec_lock:
+                    self.records.append(ExecRecord(
+                        jr.ej.job.name, task.name, dev_idx, jr.t_queue,
+                        now, now, crashed=True))
+                finish(jr, crashed=True)
+                return
+            t_start = time.monotonic()
+            crashed = False
+            try:
+                # lazy runtime: replay buffer queues on the chosen device,
+                # then launch the real computation
+                device = self.device_map[dev_idx]
+                lazy.kernel_launch_prepare(jr.ej.buffers, device)
+                jr.ej.runners[item.task_idx](device)
+            except Exception:
+                crashed = True
+            # epoch fence: if the device died mid-run the task was evicted and
+            # re-enqueued — this completion is stale, the fresh incarnation
+            # owns the job's progress (and the resources were already freed)
+            current = self.sched.task_end(task, epoch=item.epoch)
+            if not current:
+                return
+            if crashed:
+                now = time.monotonic()
+                with self._rec_lock:
+                    self.records.append(ExecRecord(
+                        jr.ej.job.name, task.name, dev_idx, jr.t_queue,
+                        t_start, now, crashed=True))
+                finish(jr, crashed=True)
+                return
+            with self._rec_lock:
+                self.records.append(ExecRecord(
+                    jr.ej.job.name, task.name, dev_idx, jr.t_queue, t_start,
+                    time.monotonic()))
+            jr.next_task += 1
+            if jr.next_task >= len(jr.ej.job.tasks):
+                finish(jr, crashed=False)
+            else:
+                submit_next(jr)
+
+        def pool_worker() -> None:
+            while True:
+                item = ready.get()
+                if item is None:
+                    return
+                execute(item)
+
+        threads = [threading.Thread(target=pool_worker, daemon=True)
+                   for _ in range(self.workers)]
         for t in threads:
             t.start()
+        # deterministic arrival order: jobs enter the admission path in the
+        # order given, so FIFO waiter wakeups replay the submission sequence
+        for ej in jobs:
+            ej.job.arrival_t = time.monotonic()
+            submit_next(_JobRun(ej))
+        all_done.wait()
+        for _ in threads:
+            ready.put(None)
         for t in threads:
             t.join()
+        return self._stats(jobs, attempts0)
+
+    def _stats(self, jobs: Sequence[ExecJob], attempts0: int
+               ) -> Dict[str, float]:
         done = [j.job for j in jobs if not j.job.crashed]
         t0 = min(j.job.arrival_t for j in jobs)
         t1 = max(j.job.finish_t for j in jobs)
@@ -102,7 +246,47 @@ class Executor:
             "mean_turnaround_s": sum(
                 j.job.finish_t - j.job.arrival_t for j in jobs
                 if not j.job.crashed) / max(len(done), 1),
+            "sched_attempts":
+                getattr(self.sched, "begin_attempts", 0) - attempts0,
         }
+
+
+class PollingExecutor(Executor):
+    """The previous protocol: one worker thread per in-flight job, each
+    spinning ``task_begin`` in a sleep(poll) retry loop. Kept as the baseline
+    the event-driven engine is benchmarked against — concurrency is capped at
+    ``workers`` and blocked jobs burn a thread + poll attempts each."""
+
+    def run(self, jobs: Sequence[ExecJob]) -> Dict[str, float]:
+        if not jobs:
+            return _empty_stats()
+        attempts0 = getattr(self.sched, "begin_attempts", 0)
+        q: "queue_mod.Queue[ExecJob]" = queue_mod.Queue()
+        for j in jobs:
+            j.job.arrival_t = time.monotonic()
+            q.put(j)
+
+        def worker(_wid: int) -> None:
+            while True:
+                try:
+                    ej = q.get_nowait()
+                except queue_mod.Empty:
+                    return
+                try:
+                    self._run_job(ej)
+                except OOMError:
+                    ej.job.crashed = True
+                finally:
+                    lazy.free_all(ej.buffers)  # crash paths must free too
+                ej.job.finish_t = time.monotonic()
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(self.workers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return self._stats(jobs, attempts0)
 
     def _run_job(self, ej: ExecJob) -> None:
         for task, runner in zip(ej.job.tasks, ej.runners):
@@ -110,6 +294,8 @@ class Executor:
             # probe -> scheduler (task_begin), retry while infeasible
             dev_idx = self.sched.task_begin(task)
             while dev_idx is None:
+                if not self.sched.can_ever_fit(task):
+                    raise OOMError(f"{task.name}: never feasible")
                 time.sleep(self.poll)
                 dev_idx = self.sched.task_begin(task)
             # memory-unsafe scheduler may have oversubscribed: OOM crash
@@ -124,8 +310,6 @@ class Executor:
                     f"device {dev_idx} capacity")
             t_start = time.monotonic()
             try:
-                # lazy runtime: replay buffer queues on the chosen device,
-                # then launch the real computation
                 device = self.device_map[dev_idx]
                 lazy.kernel_launch_prepare(ej.buffers, device)
                 runner(device)
@@ -135,4 +319,3 @@ class Executor:
                 self.records.append(ExecRecord(
                     ej.job.name, task.name, dev_idx, t_queue, t_start,
                     time.monotonic()))
-        lazy.free_all(ej.buffers)

@@ -1,10 +1,27 @@
-"""Scheduler substrate: per-device state + the task_begin/task_end API.
+"""Scheduler substrate: per-device state + the task_begin/task_end API,
+plus the waiter/notification machinery behind the event-driven executor.
 
 The paper's scheduler is a user-level daemon; probes talk to it over shared
-memory. Here it is an in-process object with the same two-call contract:
+memory and a blocked ``task_begin`` sleeps on *notify* until ``task_end``
+frees capacity. Here it is an in-process object with the same contract in
+three flavours:
 
-    dev = sched.task_begin(task)   # None => no feasible device, caller waits
-    sched.task_end(task)           # frees the task's resources
+    dev = sched.task_begin(task)        # None => no feasible device
+    sched.admit_or_enqueue(task, cb)    # non-blocking: cb fires on admission
+    dev = sched.task_begin_blocking(t)  # condition-variable wait, no spinning
+    sched.task_end(task)                # frees resources, re-drives waiters
+
+``admit_or_enqueue`` is the serving-scale path: a blocked task holds **no**
+thread — it sits in a FIFO waiter queue and every ``task_end`` (or ``revive``)
+re-drives admission in arrival order, firing the stored callback with the
+placement. ``mark_dead`` evicts residents; evicted tasks that were admitted
+through the waiter path are re-enqueued at the *front* of the queue (priority
+restart) and their callback fires again when they land on a surviving device.
+
+Stale completions (a task evicted mid-run whose old incarnation later calls
+``task_end``) are fenced with a per-task *epoch*: eviction bumps the epoch, so
+a ``task_end(task, epoch=old)`` from the superseded run is a no-op and cannot
+release the re-admitted incarnation's resources.
 
 ``DeviceState`` tracks free HBM and the aggregate core demand ("in-use warps")
 of resident tasks; death marking supports the fault-tolerance tests (a dead
@@ -12,10 +29,11 @@ device is never selected and its residents re-enter the queue).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import threading
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.task import Task
 
@@ -26,6 +44,10 @@ DEFAULT_HBM = 16 * 1024**3
 # rather than in mgb.py so DeviceState can maintain the in-use slot count
 # incrementally on admit/release.
 SLOTS = 16
+
+# callback(task, placement, epoch) — placement is a device index for the flat
+# schedulers and a SliceRect for the slice scheduler
+AdmitCallback = Callable[[Task, Any, int], None]
 
 
 def slots_needed(task: Task) -> int:
@@ -74,7 +96,191 @@ class DeviceState:
         return self.used_hbm > self.total_hbm
 
 
-class Scheduler:
+@dataclasses.dataclass
+class _Waiter:
+    task: Task
+    callback: AdmitCallback
+
+
+class WaiterQueueMixin:
+    """Waiter queue + wakeup machinery shared by ``Scheduler`` and
+    ``SliceScheduler`` (the paper's notify path).
+
+    Host class contract: ``self._lock`` (a ``threading.Lock``) and
+    ``self._admit_locked(task) -> Optional[placement]`` (admission under the
+    lock). Callbacks always fire OUTSIDE the lock, so a callback may call back
+    into the scheduler without deadlocking.
+    """
+
+    def _init_waiters(self) -> None:
+        self._waiters: Deque[_Waiter] = collections.deque()
+        # uid -> callback for tasks admitted through the waiter path; consulted
+        # by mark_dead to re-enqueue evicted tasks
+        self._admit_cbs: Dict[int, AdmitCallback] = {}
+        # uid -> admission epoch; bumped on eviction to fence stale task_ends
+        self._epochs: Dict[int, int] = {}
+
+    # -- host hooks ---------------------------------------------------------
+    def _admit_locked(self, task: Task):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def can_ever_fit(self, task: Task) -> bool:
+        """Would ``task`` be admissible on an *empty* alive device? Callers
+        use this to fail fast instead of waiting forever (a 20 GB task on a
+        16 GB fleet never becomes feasible)."""
+        return True
+
+    # -- admission ----------------------------------------------------------
+    def admit_or_enqueue(self, task: Task, callback: AdmitCallback) -> bool:
+        """Try to admit ``task``; on success fire ``callback`` immediately,
+        otherwise park it in the FIFO waiter queue (no thread is held). The
+        callback fires exactly once per admission, possibly again after an
+        eviction + re-admission. If the fleet later shrinks (``mark_dead``)
+        to where the task can NEVER be admitted, the callback fires once with
+        ``placement=None`` — the caller must give up, not retry. Returns True
+        iff admitted immediately."""
+        with self._lock:
+            placement = self._admit_locked(task)
+            if placement is None:
+                self._waiters.append(_Waiter(task, callback))
+                return False
+            self._admit_cbs[task.uid] = callback
+            epoch = self._epochs.get(task.uid, 0)
+        callback(task, placement, epoch)
+        return True
+
+    def task_begin_blocking(self, task: Task,
+                            timeout: Optional[float] = None):
+        """Blocking flavour for synchronous callers (serve loop): waits on an
+        event — not a sleep/retry spin — until the wakeup path admits the
+        task. Returns the placement, or None on timeout (the waiter is then
+        cancelled)."""
+        admitted = threading.Event()
+        box: Dict[str, Any] = {}
+
+        def cb(t: Task, placement, epoch: int) -> None:
+            box["placement"] = placement  # None if permanently infeasible
+            admitted.set()
+
+        self.admit_or_enqueue(task, cb)
+        if not admitted.wait(timeout):
+            if self.cancel_wait(task):
+                return None
+            admitted.wait()  # admission raced the timeout: take the device
+        return box["placement"]
+
+    # -- wakeups ------------------------------------------------------------
+    # distinct failed resource vectors memoized per drain pass; beyond this
+    # many, later waiters are probed unconditionally (bounds memo-compare cost)
+    _DRAIN_MEMO = 32
+
+    def _drain_locked(self) -> List[Tuple[_Waiter, Any, int]]:
+        """FIFO scan: admit every now-feasible waiter in arrival order,
+        keeping still-infeasible ones queued (older tasks always get first
+        claim on freed capacity; a too-big head does not block smaller tasks
+        behind it, which avoids head-of-line deadlock).
+
+        Waiters whose resource vector already failed in THIS pass are skipped
+        without a probe — identical requirements at the same instant see
+        identical feasibility — so a homogeneous fleet (thousands of equal
+        decode tasks) costs O(admitted + 1) per wakeup, not O(queue)."""
+        fired: List[Tuple[_Waiter, Any, int]] = []
+        still: Deque[_Waiter] = collections.deque()
+        failed: List[Any] = []  # ResourceVectors infeasible this pass
+        while self._waiters:
+            w = self._waiters.popleft()
+            res = w.task.resources
+            if any(f == res for f in failed):
+                still.append(w)
+                continue
+            placement = self._admit_locked(w.task)
+            if placement is None:
+                if len(failed) < self._DRAIN_MEMO:
+                    failed.append(res)
+                still.append(w)
+            else:
+                self._admit_cbs[w.task.uid] = w.callback
+                fired.append((w, placement,
+                              self._epochs.get(w.task.uid, 0)))
+        self._waiters = still
+        return fired
+
+    @staticmethod
+    def _fire(fired: Sequence[Tuple[_Waiter, Any, int]]) -> None:
+        for w, placement, epoch in fired:
+            w.callback(w.task, placement, epoch)
+
+    def notify(self) -> int:
+        """Re-drive the waiter queue now (used after ``revive``; harmless any
+        time). Returns the number of waiters admitted."""
+        with self._lock:
+            fired = self._drain_locked()
+        self._fire(fired)
+        return len(fired)
+
+    # -- waiter-queue introspection / cancellation --------------------------
+    def waiting_count(self) -> int:
+        with self._lock:
+            return len(self._waiters)
+
+    def waiting_tasks(self) -> List[Task]:
+        with self._lock:
+            return [w.task for w in self._waiters]
+
+    def cancel_wait(self, task: Task) -> bool:
+        """Remove ``task`` from the waiter queue. True iff it was waiting."""
+        with self._lock:
+            for w in self._waiters:
+                if w.task.uid == task.uid:
+                    self._waiters.remove(w)
+                    return True
+        return False
+
+    def cancel_all_waiters(self) -> List[Task]:
+        """Drop every waiter (caller decides their fate — e.g. the simulator
+        counts never-feasible ones as crashed-at-submit)."""
+        with self._lock:
+            out = [w.task for w in self._waiters]
+            self._waiters.clear()
+            return out
+
+    # -- epoch fencing ------------------------------------------------------
+    def admission_epoch(self, task: Task) -> int:
+        with self._lock:
+            return self._epochs.get(task.uid, 0)
+
+    def _stale_locked(self, task: Task, epoch: Optional[int]) -> bool:
+        return (epoch is not None
+                and epoch != self._epochs.get(task.uid, 0))
+
+    def _fail_impossible_locked(self) -> List[Tuple[_Waiter, Any, int]]:
+        """After capacity shrinks (mark_dead), sweep out waiters that can
+        never be admitted again — without this they would wait forever once
+        the last task_end wakeup has fired. Returns (waiter, None, epoch)
+        tuples for ``_fire``: placement None tells the caller to give up."""
+        failed: List[Tuple[_Waiter, Any, int]] = []
+        still: Deque[_Waiter] = collections.deque()
+        for w in self._waiters:
+            if self.can_ever_fit(w.task):
+                still.append(w)
+            else:
+                failed.append((w, None, self._epochs.get(w.task.uid, 0)))
+        self._waiters = still
+        return failed
+
+    def _requeue_evicted_locked(self, evicted: Sequence[Task]) -> None:
+        """Re-enqueue evicted waiter-path tasks at the FRONT of the queue
+        (restart priority), bumping their epoch so the superseded run's
+        ``task_end`` becomes a fenced no-op."""
+        for t in reversed(evicted):  # reversed + appendleft keeps their order
+            cb = self._admit_cbs.pop(t.uid, None)
+            if cb is None:
+                continue  # legacy task_begin admission: caller re-drives
+            self._epochs[t.uid] = self._epochs.get(t.uid, 0) + 1
+            self._waiters.appendleft(_Waiter(t, cb))
+
+
+class Scheduler(WaiterQueueMixin):
     """Base scheduler: subclasses implement ``select_device``."""
 
     name = "base"
@@ -84,31 +290,55 @@ class Scheduler:
                         for i in range(num_devices)]
         self._lock = threading.Lock()
         self.placements: List[tuple] = []  # (task_uid, device) audit log
+        # admission attempts (successful or not) — the scheduler-overhead
+        # metric benchmarks/bench_executor.py compares across executors
+        self.begin_attempts = 0
+        self._init_waiters()
 
     # -- policy hook -------------------------------------------------------
     def select_device(self, task: Task) -> Optional[DeviceState]:
         raise NotImplementedError
 
+    def _admit_locked(self, task: Task) -> Optional[int]:
+        self.begin_attempts += 1
+        dev = self.select_device(task)
+        if dev is None:
+            return None
+        dev.admit(task)
+        task.device = dev.index
+        self.placements.append((task.uid, dev.index))
+        return dev.index
+
+    def can_ever_fit(self, task: Task) -> bool:
+        return any(d.alive and task.resources.hbm_bytes <= d.total_hbm
+                   for d in self.devices)
+
     # -- paper API -----------------------------------------------------------
     def task_begin(self, task: Task) -> Optional[int]:
         """Probe entry point: returns the device index or None (caller queues)."""
         with self._lock:
-            dev = self.select_device(task)
-            if dev is None:
-                return None
-            dev.admit(task)
-            task.device = dev.index
-            self.placements.append((task.uid, dev.index))
-            return dev.index
+            return self._admit_locked(task)
 
-    def task_end(self, task: Task) -> None:
+    def task_end(self, task: Task, *, epoch: Optional[int] = None) -> bool:
+        """Free the task's resources and re-drive the waiter queue. With
+        ``epoch``, a completion from an evicted (superseded) run is fenced:
+        nothing is released and False is returned."""
         with self._lock:
+            if self._stale_locked(task, epoch):
+                return False
             if task.device is not None:
                 self.devices[task.device].release(task)
+            self._admit_cbs.pop(task.uid, None)
+            fired = self._drain_locked()
+        self._fire(fired)
+        return True
 
     # -- fault tolerance -----------------------------------------------------
     def mark_dead(self, device_index: int) -> List[Task]:
-        """Fail a device: evict residents (they re-enter the queue)."""
+        """Fail a device: evict residents. Waiter-path residents re-enter the
+        waiter queue with restart priority (their callback fires again on a
+        surviving device); legacy ``task_begin`` residents are only returned
+        for the caller to re-drive."""
         with self._lock:
             dev = self.devices[device_index]
             dev.alive = False
@@ -116,11 +346,17 @@ class Scheduler:
             for t in evicted:
                 dev.release(t)
                 t.device = None
-            return evicted
+            self._requeue_evicted_locked(evicted)
+            fired = self._drain_locked()  # waiters may fit on survivors
+            fired += self._fail_impossible_locked()
+        self._fire(fired)
+        return evicted
 
     def revive(self, device_index: int) -> None:
         with self._lock:
             self.devices[device_index].alive = True
+            fired = self._drain_locked()  # waiters may land on the revived dev
+        self._fire(fired)
 
     def alive_devices(self) -> List[DeviceState]:
         return [d for d in self.devices if d.alive]

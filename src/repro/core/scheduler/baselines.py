@@ -47,6 +47,10 @@ class CGScheduler(Scheduler):
         self.ratio = ratio
         self._rr = 0
 
+    def can_ever_fit(self, task: Task) -> bool:
+        # memory-oblivious: any alive device "fits" (and may then OOM)
+        return any(d.alive for d in self.devices)
+
     def select_device(self, task: Task) -> Optional[DeviceState]:
         n = len(self.devices)
         for k in range(n):

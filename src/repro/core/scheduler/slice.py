@@ -19,7 +19,9 @@ import math
 import threading
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.scheduler.base import DEFAULT_HBM, DeviceState, slots_needed
+from repro.core.scheduler.base import (
+    DEFAULT_HBM, DeviceState, WaiterQueueMixin, slots_needed,
+)
 from repro.core.task import Task
 
 
@@ -56,8 +58,14 @@ def _slice_shapes(chips: int, rows: int, cols: int) -> List[Tuple[int, int]]:
     return shapes
 
 
-class SliceScheduler:
-    """Places k-chip tasks on contiguous slices of a multi-pod chip grid."""
+class SliceScheduler(WaiterQueueMixin):
+    """Places k-chip tasks on contiguous slices of a multi-pod chip grid.
+
+    Inherits the waiter/wakeup machinery from ``WaiterQueueMixin``, so the
+    event-driven executor drives slice tasks through the exact same
+    admit_or_enqueue / task_end-notify protocol as the flat schedulers — the
+    admission callback just receives a ``SliceRect`` instead of an index.
+    """
 
     name = "MGB-slice"
 
@@ -70,6 +78,8 @@ class SliceScheduler:
             for p in range(pods) for r in range(rows) for c in range(cols)}
         self.bound: Dict[int, SliceRect] = {}   # task uid -> slice
         self._lock = threading.Lock()
+        self.begin_attempts = 0
+        self._init_waiters()
 
     # -- feasibility --------------------------------------------------------
     def _fits(self, rect: SliceRect, per_chip_bytes: int) -> bool:
@@ -101,37 +111,57 @@ class SliceScheduler:
         return best
 
     # -- paper API at slice granularity --------------------------------------
-    def task_begin(self, task: Task) -> Optional[SliceRect]:
+    def _admit_locked(self, task: Task) -> Optional[SliceRect]:
+        self.begin_attempts += 1
         r = task.resources
         per_chip = r.hbm_bytes // max(r.chips, 1)
-        with self._lock:
-            rect = self._find_slice(r.chips, per_chip)
-            if rect is None:
-                return None
-            for cell in rect.cells():
-                dev = self.chips[cell]
-                # not DeviceState.admit(): a slice task charges each chip its
-                # per-chip share, not the whole-task footprint
-                dev.used_hbm += per_chip
-                dev.used_slots += slots_needed(task)
-                dev.residents[task.uid] = task
-            self.bound[task.uid] = rect
-            task.device = rect.pod * self.rows * self.cols \
-                + rect.r0 * self.cols + rect.c0
-            return rect
+        rect = self._find_slice(r.chips, per_chip)
+        if rect is None:
+            return None
+        for cell in rect.cells():
+            dev = self.chips[cell]
+            # not DeviceState.admit(): a slice task charges each chip its
+            # per-chip share, not the whole-task footprint
+            dev.used_hbm += per_chip
+            dev.used_slots += slots_needed(task)
+            dev.residents[task.uid] = task
+        self.bound[task.uid] = rect
+        task.device = rect.pod * self.rows * self.cols \
+            + rect.r0 * self.cols + rect.c0
+        return rect
 
-    def task_end(self, task: Task) -> None:
+    def can_ever_fit(self, task: Task) -> bool:
+        r = task.resources
+        per_chip = r.hbm_bytes // max(r.chips, 1)
+        alive = sum(1 for d in self.chips.values()
+                    if d.alive and per_chip <= d.total_hbm)
+        return alive >= r.chips
+
+    def task_begin(self, task: Task) -> Optional[SliceRect]:
         with self._lock:
-            rect = self.bound.pop(task.uid, None)
-            if rect is None:
-                return
-            per_chip = task.resources.hbm_bytes // max(task.resources.chips, 1)
-            for cell in rect.cells():
-                dev = self.chips[cell]
-                if task.uid in dev.residents:
-                    del dev.residents[task.uid]
-                    dev.used_hbm -= per_chip
-                    dev.used_slots -= slots_needed(task)
+            return self._admit_locked(task)
+
+    def _release_locked(self, task: Task) -> None:
+        rect = self.bound.pop(task.uid, None)
+        if rect is None:
+            return
+        per_chip = task.resources.hbm_bytes // max(task.resources.chips, 1)
+        for cell in rect.cells():
+            dev = self.chips[cell]
+            if task.uid in dev.residents:
+                del dev.residents[task.uid]
+                dev.used_hbm -= per_chip
+                dev.used_slots -= slots_needed(task)
+
+    def task_end(self, task: Task, *, epoch: Optional[int] = None) -> bool:
+        with self._lock:
+            if self._stale_locked(task, epoch):
+                return False
+            self._release_locked(task)
+            self._admit_cbs.pop(task.uid, None)
+            fired = self._drain_locked()
+        self._fire(fired)
+        return True
 
     def mark_dead(self, cell: Tuple[int, int, int]) -> List[Task]:
         """Fail one chip: every slice-task overlapping it is evicted whole."""
@@ -140,24 +170,25 @@ class SliceScheduler:
             evicted = []
             for uid, rect in list(self.bound.items()):
                 if cell in set(rect.cells()):
-                    task = self.chips[cell].residents.get(uid)
-                    if task is None:
-                        for c2 in rect.cells():
-                            task = self.chips[c2].residents.get(uid)
-                            if task is not None:
-                                break
-                    per_chip = task.resources.hbm_bytes \
-                        // max(task.resources.chips, 1)
+                    task = None
                     for c2 in rect.cells():
-                        d = self.chips[c2]
-                        if uid in d.residents:
-                            del d.residents[uid]
-                            d.used_hbm -= per_chip
-                            d.used_slots -= slots_needed(task)
-                    del self.bound[uid]
+                        task = self.chips[c2].residents.get(uid)
+                        if task is not None:
+                            break
+                    self._release_locked(task)
                     task.device = None
                     evicted.append(task)
-            return evicted
+            self._requeue_evicted_locked(evicted)
+            fired = self._drain_locked()  # waiters may fit on survivors
+            fired += self._fail_impossible_locked()
+        self._fire(fired)
+        return evicted
+
+    def revive(self, cell: Tuple[int, int, int]) -> None:
+        with self._lock:
+            self.chips[cell].alive = True
+            fired = self._drain_locked()
+        self._fire(fired)
 
     def utilization(self) -> float:
         busy = sum(1 for d in self.chips.values() if d.residents)

@@ -90,7 +90,11 @@ class Simulator:
         queue: List[_JobState] = [_JobState(j) for j in jobs]
         for js in queue:
             js.job.arrival_t = 0.0
-        waiting: List[_JobState] = []       # picked by a worker, no device yet
+        # admissions fired by the scheduler's waiter queue (the SAME wakeup
+        # path the live executor uses, so sim and executor agree on placement
+        # sequence): callbacks append here, try_start drains
+        admitted_buf: List[Tuple[_JobState, Task, int]] = []
+        blocked: Dict[int, _JobState] = {}  # task uid -> job waiting in queue
         running: Dict[int, _Running] = {}   # task uid -> running record
         idle_workers = self.workers
         now = 0.0
@@ -115,20 +119,35 @@ class Simulator:
                         1.0 + interference.ETA_PER_RESIDENT * (len(ds) - 1))
                     for d, ds in by_dev.items()}
 
+        def submit(js: _JobState) -> None:
+            """Hand the job's next task to the scheduler's admission path:
+            admitted now (callback fires inline) or parked in the waiter
+            queue — wakeups on task_end/mark_dead/revive re-drive it."""
+            task = js.job.tasks[js.next_task]
+            blocked[task.uid] = js
+
+            def cb(t: Task, placement: int, epoch: int, js=js) -> None:
+                admitted_buf.append((js, t, placement))
+
+            self.sched.admit_or_enqueue(task, cb)
+
         def try_start() -> None:
             nonlocal idle_workers, crashed, completed
             # workers pick jobs from the queue while any are idle
             while idle_workers > 0 and queue:
                 js = queue.pop(0)
                 idle_workers -= 1
-                waiting.append(js)
-            # waiting jobs ask the scheduler for their next task's device
-            still: List[_JobState] = []
-            for js in waiting:
-                task = js.job.tasks[js.next_task]
-                dev = self.sched.task_begin(task)
+                submit(js)
+            # drain admissions (task_end inside this loop can fire more)
+            while admitted_buf:
+                js, task, dev = admitted_buf.pop(0)
+                blocked.pop(task.uid, None)
                 if dev is None:
-                    still.append(js)
+                    # mark_dead shrank the fleet below this task's needs:
+                    # the scheduler gave up on it — crashed at submit
+                    js.job.crashed = True
+                    js.job.finish_t = now
+                    _finish_job(js, crashed_job=True)
                     continue
                 # memory-unsafe scheduler: admitted past capacity -> OOM
                 # crash after the startup delay (worker stays occupied)
@@ -142,7 +161,6 @@ class Simulator:
                 solo[task.uid] = task.resources.est_seconds
                 running[task.uid] = _Running(task, js, task.resources.est_seconds,
                                              dev)
-            waiting[:] = still
 
         def _finish_job(js: _JobState, crashed_job: bool = False) -> None:
             nonlocal idle_workers, crashed, completed
@@ -164,7 +182,7 @@ class Simulator:
                 _finish_job(js, crashed_job=True)
 
         try_start()
-        while running or waiting or queue or crashing:
+        while running or queue or crashing or blocked or admitted_buf:
             if now > time_limit:
                 break
             if not running and crashing:
@@ -173,36 +191,36 @@ class Simulator:
                 try_start()
                 continue
             if not running:
-                # nothing progresses: either a failure is pending or the
-                # scheduler is waiting on a poll retry
+                # nothing progresses: either a failure is pending or every
+                # submitted task is parked in the waiter queue
                 if failure_pending is not None and failure_pending[0] <= now + self.poll:
                     now = max(now, failure_pending[0])
                 else:
                     now += self.poll
-                    if failure_pending and now >= failure_pending[0]:
-                        pass
                 try_start()
-                if not running and not queue and not waiting:
+                if not running and not queue and not blocked \
+                        and not admitted_buf:
                     break
                 if not running and failure_pending is None and not queue:
-                    # waiting jobs can never start (e.g. task > device HBM):
+                    # waiting tasks can never start (e.g. task > device HBM):
                     # count them as crashed-at-submit to avoid livelock
-                    for js in waiting:
-                        js.job.crashed = True
-                        _finish_job(js, crashed_job=True)
-                    waiting.clear()
+                    for t in self.sched.cancel_all_waiters():
+                        js = blocked.pop(t.uid, None)
+                        if js is not None:
+                            js.job.crashed = True
+                            _finish_job(js, crashed_job=True)
+                    blocked.clear()
                     break
                 if not running:
                     continue
             rt = rates()
-            # next event: earliest task completion at current rates, next
-            # poll tick (if anyone is waiting), or the injected failure
+            # next event: earliest task completion at current rates (a
+            # completion's task_end IS the wakeup that re-drives admission —
+            # no poll tick needed for waiters), or the injected failure
             dt_done = min((r.remaining / rt[r.device][0]
                            for r in running.values()),
                           default=float("inf"))
             dt = dt_done
-            if waiting or queue:
-                dt = min(dt, self.poll)
             if crashing:
                 dt = min(dt, max(min(t for t, _ in crashing) - now, 0.0))
             if failure_pending is not None:
@@ -222,15 +240,16 @@ class Simulator:
             if failure_pending is not None and now >= failure_pending[0] - _EPS:
                 _, dead = failure_pending
                 failure_pending = None
+                # mark_dead re-enqueues evicted tasks through the waiter
+                # queue with restart priority; their admission callback may
+                # already have fired onto a surviving device (admitted_buf)
                 evicted = self.sched.mark_dead(dead)
                 for t in evicted:
                     rec = running.pop(t.uid, None)
                     if rec is not None:
                         # restart from scratch on another device (task-level
                         # checkpoint/restart is the executor's job)
-                        rec.job.next_task = min(rec.job.next_task,
-                                                len(rec.job.job.tasks) - 1)
-                        waiting.append(rec.job)
+                        blocked.setdefault(t.uid, rec.job)
             # completions
             done = [uid for uid, r in running.items() if r.remaining <= 1e-9]
             for uid in done:
@@ -247,7 +266,7 @@ class Simulator:
                 if js.next_task >= len(js.job.tasks):
                     _finish_job(js)
                 else:
-                    waiting.append(js)
+                    submit(js)
             try_start()
 
         makespan = now

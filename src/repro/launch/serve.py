@@ -1,6 +1,11 @@
 """End-to-end serving driver: batched prefill + decode under the
 compiler-guided scheduler — every request batch is a GPU task whose resource
-vector comes from the compiled prefill/decode executables (repro.core.probe).
+vector comes from the compiled prefill/decode executables (repro.core.probe),
+driven through the event-driven executor: requests are submitted up front,
+blocked batches hold no thread (they park in the scheduler's waiter queue),
+and completions wake the next admission. The execution pool is sized to the
+device count, so thousands of queued decode tasks need only a handful of
+threads.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
@@ -16,17 +21,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS, get_arch
+from repro.core.executor import ExecJob, Executor
 from repro.core.probe import probe_fn
 from repro.core.scheduler import MGBAlg3Scheduler
-from repro.core.task import Task, UnitTask
-from repro.models import decode as D
+from repro.core.task import Job, Task, UnitTask
 from repro.models.model import init_params
 from repro.serve.decode import greedy_generate, make_prefill_step
 
 
 def serve(arch: str, *, requests: int = 16, batch: int = 4,
           prompt_len: int = 64, gen_len: int = 32, seed: int = 0,
-          num_devices: int = 2) -> dict:
+          num_devices: int = 2, workers: int = 0) -> dict:
     cfg = get_arch(arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(seed))
     prefill = jax.jit(make_prefill_step(cfg, attn_impl="flash_jnp"))
@@ -34,38 +39,50 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
 
     rng = np.random.default_rng(seed)
     n_batches = (requests + batch - 1) // batch
-    lat, toks = [], 0
-    t0 = time.time()
+    # probe ONE representative batch (all batches share shapes, so they share
+    # the compiled executable and the resource vector)
+    first_prompts = jnp.asarray(rng.integers(
+        0, cfg.vocab, (batch, prompt_len), dtype=np.int32))
+    probe_batch = {"tokens": first_prompts}
+    if cfg.embedding_frontend_stub:
+        probe_batch["embeds"] = jnp.asarray(rng.standard_normal(
+            (batch, prompt_len, cfg.d_model), dtype=np.float32))
+    vec = probe_fn(prefill, params, probe_batch)
+
+    jobs = []
     for i in range(n_batches):
-        prompts = jnp.asarray(rng.integers(
-            0, cfg.vocab, (batch, prompt_len), dtype=np.int32))
-        b = {"tokens": prompts}
-        if cfg.embedding_frontend_stub:
+        b = dict(probe_batch) if i == 0 else {
+            "tokens": jnp.asarray(rng.integers(
+                0, cfg.vocab, (batch, prompt_len), dtype=np.int32))}
+        if cfg.embedding_frontend_stub and "embeds" not in b:
             b["embeds"] = jnp.asarray(rng.standard_normal(
                 (batch, prompt_len, cfg.d_model), dtype=np.float32))
-        # probe the batch as a GPU task and ask the scheduler for a device
-        vec = probe_fn(prefill, params, b)
-        task = Task(units=[UnitTask(fn=None, memobjs=frozenset({f"req{i}"}),
-                                    resources=vec, name=f"req{i}")],
-                    name=f"req{i}")
-        while sched.task_begin(task) is None:
-            time.sleep(0.001)
-        t_req = time.time()
-        try:
+
+        def runner(device, b=b):
             logits, cache = prefill(params, b)
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             out, _ = greedy_generate(cfg, params, cache, first, prompt_len,
                                      gen_len - 1)
             jax.block_until_ready(out)
-        finally:
-            sched.task_end(task)
-        lat.append(time.time() - t_req)
-        toks += batch * gen_len
+
+        task = Task(units=[UnitTask(fn=None, memobjs=frozenset({f"req{i}"}),
+                                    resources=vec, name=f"req{i}")],
+                    name=f"req{i}")
+        jobs.append(ExecJob(job=Job(tasks=[task], name=f"req{i}"),
+                            runners=[runner]))
+
+    ex = Executor(sched, workers=workers or num_devices)
+    t0 = time.time()
+    stats = ex.run(jobs)
     wall = time.time() - t0
+    toks = stats["completed"] * batch * gen_len
+    lat = [r.t_end - r.t_start for r in ex.records if not r.crashed]
     return {"requests": requests, "batches": n_batches,
             "tokens_generated": toks, "wall_s": wall,
             "tokens_per_s": toks / wall,
-            "mean_batch_latency_s": float(np.mean(lat)),
+            "mean_batch_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "completed": stats["completed"], "crashed": stats["crashed"],
+            "sched_attempts": stats["sched_attempts"],
             "placements": sched.placements}
 
 
@@ -76,12 +93,17 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--num-devices", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="execution-pool size (0 = one per device)")
     args = ap.parse_args()
     res = serve(args.arch, requests=args.requests, batch=args.batch,
-                prompt_len=args.prompt_len, gen_len=args.gen_len)
+                prompt_len=args.prompt_len, gen_len=args.gen_len,
+                num_devices=args.num_devices, workers=args.workers)
     print(f"[serve] {res['tokens_generated']} tokens in {res['wall_s']:.1f}s "
           f"({res['tokens_per_s']:.1f} tok/s, "
-          f"batch latency {res['mean_batch_latency_s'] * 1e3:.0f} ms)")
+          f"batch latency {res['mean_batch_latency_s'] * 1e3:.0f} ms, "
+          f"{res['sched_attempts']} admission attempts)")
 
 
 if __name__ == "__main__":

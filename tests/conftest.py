@@ -1,14 +1,57 @@
-"""Make ``repro`` importable without an editable install.
+"""Make ``repro`` importable without an editable install, and guard every
+test with a timeout so a deadlocked waiter queue fails fast instead of
+hanging the CI job.
 
 The tier-1 command exports PYTHONPATH=src, but a plain ``pytest`` from the
 repo root (or an IDE runner) must work too, so insert src/ ahead of
 site-packages. A properly installed ``repro`` still wins nothing here —
 src/ simply shadows it, which is what a source checkout should do.
+
+Timeout guard: when ``pytest-timeout`` is installed (CI passes
+``--timeout=300``) it owns the job. Otherwise a faulthandler-based fallback
+arms ``dump_traceback_later`` around each test: a hung test dumps every
+thread's stack and kills the process — exactly the fail-fast behaviour a
+deadlock needs. Tune with REPRO_TEST_TIMEOUT (seconds, 0 disables).
 """
+import faulthandler
 import os
 import sys
+
+import pytest
 
 _SRC = os.path.abspath(
     os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+_TIMEOUT_S = int(os.environ.get("REPRO_TEST_TIMEOUT", "300"))
+_HAVE_TIMEOUT_PLUGIN = False
+
+
+def pytest_configure(config):
+    """Defer to pytest-timeout only when it is actually CONFIGURED (via
+    --timeout or a timeout ini value) — an installed-but-idle plugin must
+    not silently disable the fallback guard."""
+    global _HAVE_TIMEOUT_PLUGIN
+    configured = False
+    if config.pluginmanager.hasplugin("timeout"):
+        try:
+            val = config.getoption("--timeout")
+            if val is None:
+                val = config.getini("timeout")
+            configured = bool(val and float(val) > 0)
+        except (ValueError, TypeError, KeyError):
+            configured = False
+    _HAVE_TIMEOUT_PLUGIN = configured
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_protocol(item, nextitem):
+    if _HAVE_TIMEOUT_PLUGIN or _TIMEOUT_S <= 0:
+        yield
+        return
+    faulthandler.dump_traceback_later(_TIMEOUT_S, exit=True)
+    try:
+        yield
+    finally:
+        faulthandler.cancel_dump_traceback_later()

@@ -1,0 +1,392 @@
+"""Concurrency test battery for the event-driven executor + the scheduler
+waiter/wakeup substrate (ISSUE 2 tentpole):
+
+  * N jobs >> workers all complete — a blocked task holds NO thread;
+  * no starvation under FIFO wakeups: whoever waited longest gets first
+    claim on freed capacity;
+  * wakeup ordering is deterministic under a seeded arrival order;
+  * the OOM crash path still records ``ExecRecord(crashed=True)`` and
+    releases scheduler resources;
+  * fault tolerance: ``mark_dead`` re-enqueues blocked/resident tasks through
+    the waiter queue onto surviving devices; ``revive`` lets waiters land on
+    the revived device;
+  * ``Executor.run([])`` returns a zeroed metrics dict instead of raising.
+"""
+import threading
+import time
+
+from repro.core.executor import ExecJob, Executor, PollingExecutor
+from repro.core.scheduler import (
+    CGScheduler, MGBAlg2Scheduler, MGBAlg3Scheduler,
+)
+from repro.core.task import Job, ResourceVector, Task, UnitTask
+
+GB = 1024**3
+
+
+def mk_task(name, mem_gb=2.0, demand=0.5, est=0.005):
+    vec = ResourceVector(hbm_bytes=int(mem_gb * GB), flops=1e9,
+                         bytes_accessed=1e9, est_seconds=est,
+                         core_demand=demand, bw_demand=demand)
+    return Task(units=[UnitTask(fn=None, memobjs=frozenset({name}),
+                                resources=vec, name=name)], name=name)
+
+
+def mk_job(i, mem_gb=2.0, demand=0.5, sleep=0.003, body=None):
+    name = f"j{i}"
+    runner = body if body is not None else (
+        lambda device, s=sleep: time.sleep(s))
+    return ExecJob(job=Job(tasks=[mk_task(name, mem_gb, demand)], name=name),
+                   runners=[runner])
+
+
+# ---------------------------------------------------------------------------
+# capacity: N jobs >> workers, blocked tasks hold no thread
+# ---------------------------------------------------------------------------
+
+def test_64_jobs_complete_with_two_workers():
+    """Acceptance criterion: 64 queued single-task jobs on a 2-thread
+    execution pool all complete under MGB — blocked jobs park in the waiter
+    queue instead of holding a worker."""
+    sched = MGBAlg3Scheduler(2)
+    ex = Executor(sched, workers=2)
+    stats = ex.run([mk_job(i) for i in range(64)])
+    assert stats["completed"] == 64 and stats["crashed"] == 0
+    assert {d for _, d in sched.placements} == {0, 1}
+    # every resource was released
+    assert all(d.used_hbm == 0 and d.used_slots == 0 for d in sched.devices)
+    assert sched.waiting_count() == 0
+
+
+def test_blocked_jobs_hold_no_thread():
+    """With 32 queued jobs and a pool of 2, the process never runs more than
+    pool + constant threads: waiting is a queue entry, not a thread."""
+    base = threading.active_count()
+    peak = [0]
+
+    def body(device):
+        peak[0] = max(peak[0], threading.active_count())
+        time.sleep(0.002)
+
+    # memory admits only 2 tasks at a time -> 30 jobs always blocked
+    sched = MGBAlg3Scheduler(1)
+    stats = Executor(sched, workers=2).run(
+        [mk_job(i, mem_gb=7.5, body=body) for i in range(32)])
+    assert stats["completed"] == 32
+    # the two pool threads plus (at most) one unrelated background thread —
+    # NOT one thread per blocked job, which would add ~30
+    assert peak[0] <= base + 3
+
+
+def test_bounded_pool_respects_worker_count():
+    running = [0]
+    peak = [0]
+    lock = threading.Lock()
+
+    def body(device):
+        with lock:
+            running[0] += 1
+            peak[0] = max(peak[0], running[0])
+        time.sleep(0.002)
+        with lock:
+            running[0] -= 1
+
+    stats = Executor(MGBAlg3Scheduler(4), workers=3).run(
+        [mk_job(i, mem_gb=0.5, body=body) for i in range(24)])
+    assert stats["completed"] == 24
+    assert peak[0] <= 3  # execution concurrency == pool size, not job count
+
+
+# ---------------------------------------------------------------------------
+# fairness / wakeup ordering
+# ---------------------------------------------------------------------------
+
+def test_fifo_wakeup_no_starvation():
+    """Whoever waited longest is admitted first when capacity frees: with a
+    single exclusive device (Alg2, demand 1.0) the admission order must equal
+    the arrival order exactly."""
+    sched = MGBAlg2Scheduler(1)
+    order = []
+
+    def body_for(i):
+        def body(device, i=i):
+            order.append(i)
+            time.sleep(0.001)
+        return body
+
+    jobs = [mk_job(i, mem_gb=1.0, demand=1.0, body=body_for(i))
+            for i in range(12)]
+    stats = Executor(sched, workers=1).run(jobs)
+    assert stats["completed"] == 12
+    assert order == list(range(12))
+
+
+def test_big_task_not_starved_by_small_stream():
+    """A large waiter is always probed before younger small waiters (FIFO
+    scan), so it lands as soon as its capacity frees — the small tasks behind
+    it cannot leapfrog forever."""
+    sched = MGBAlg3Scheduler(1)
+    blockers = [mk_task(f"b{i}", mem_gb=7.0) for i in range(2)]
+    for b in blockers:
+        assert sched.task_begin(b) == 0
+    admitted = []
+    cb = lambda t, dev, epoch: admitted.append(t.name)
+    big = mk_task("big", mem_gb=14.0)
+    assert not sched.admit_or_enqueue(big, cb)           # 14 > 2 free
+    for i in range(4):
+        assert not sched.admit_or_enqueue(
+            mk_task(f"s{i}", mem_gb=3.0), cb)            # 3 > 2 free
+    sched.task_end(blockers[0])   # 9 free: big still blocked, s0..s2 fit
+    assert admitted == ["s0", "s1", "s2"]
+    sched.task_end(blockers[1])   # 16-9=7... s0-s2 resident: big waits
+    sched.task_end(sched.devices[0].residents[
+        next(iter(sched.devices[0].residents))])
+    # keep releasing the small residents; the moment 14 GB frees, big lands
+    for t in list(sched.devices[0].residents.values()):
+        if t.name != "big":
+            sched.task_end(t)
+    assert "big" in admitted and "s3" in admitted
+    assert sched.waiting_count() == 0
+
+
+def test_wakeup_order_deterministic_under_seeded_arrivals():
+    """Same seeded arrival order => identical placement sequence, run to
+    run (the waiter queue is FIFO and the drain is a deterministic scan)."""
+    import random
+
+    def one_run():
+        rng = random.Random(7)
+        sched = MGBAlg2Scheduler(2)
+        admitted = []
+        waiters = []
+        for i in range(24):
+            d = rng.choice([0.3, 0.6, 1.0])
+            t = mk_task(f"t{i}", mem_gb=1.0, demand=d)
+            sched.admit_or_enqueue(
+                t, lambda t, dev, epoch: admitted.append((t.name, dev)))
+            waiters.append(t)
+        # release every resident in a seeded order until all 24 admitted
+        while len(admitted) < 24:
+            resident = [t for d_ in sched.devices
+                        for t in d_.residents.values()]
+            sched.task_end(resident[rng.randrange(len(resident))])
+        return admitted
+
+    assert one_run() == one_run()
+
+
+# ---------------------------------------------------------------------------
+# OOM crash path
+# ---------------------------------------------------------------------------
+
+def test_oom_crash_records_and_releases():
+    sched = CGScheduler(1, ratio=3)
+    ex = Executor(sched, workers=3)
+    jobs = [mk_job(i, mem_gb=12.0, sleep=0.05) for i in range(3)]
+    stats = ex.run(jobs)
+    assert stats["crashed"] >= 1           # 3 x 12 GB on one 16 GB device
+    assert stats["completed"] + stats["crashed"] == 3
+    crashed_recs = [r for r in ex.records if r.crashed]
+    assert len(crashed_recs) >= 1
+    # the crash released everything it held
+    assert all(d.used_hbm == 0 and d.used_slots == 0 for d in sched.devices)
+    assert sched.waiting_count() == 0
+
+
+def test_never_feasible_task_crashes_instead_of_waiting_forever():
+    sched = MGBAlg3Scheduler(2)
+    ex = Executor(sched, workers=2)
+    jobs = [mk_job(0, mem_gb=20.0), mk_job(1, mem_gb=1.0)]
+    stats = ex.run(jobs)
+    assert stats["crashed"] == 1 and stats["completed"] == 1
+    assert any(r.crashed and r.device == -1 for r in ex.records)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: mark_dead / revive through the waiter queue
+# ---------------------------------------------------------------------------
+
+def test_mark_dead_requeues_resident_and_blocked_tasks():
+    sched = MGBAlg3Scheduler(2)
+    ex = Executor(sched, workers=4)
+    jobs = [mk_job(i, mem_gb=6.0, sleep=0.08) for i in range(6)]
+    t_kill = [0.0]
+
+    def killer():
+        time.sleep(0.03)
+        t_kill[0] = time.monotonic()
+        sched.mark_dead(0)
+
+    th = threading.Thread(target=killer)
+    th.start()
+    stats = ex.run(jobs)
+    th.join()
+    assert stats["completed"] == 6 and stats["crashed"] == 0
+    # every record finishing after the kill ran on the surviving device
+    for r in ex.records:
+        if not r.crashed and r.t_start > t_kill[0]:
+            assert r.device == 1
+    assert all(d.used_hbm == 0 for d in sched.devices)
+
+
+def test_mark_dead_with_blocked_waiters_lands_on_survivor():
+    sched = MGBAlg3Scheduler(2)
+    admitted = []
+    cb = lambda t, dev, epoch: admitted.append((t.name, dev))
+    resident = mk_task("res", mem_gb=9.0)
+    assert sched.admit_or_enqueue(resident, cb)        # -> device 0
+    dev0 = resident.device
+    other = mk_task("other", mem_gb=9.0)
+    assert sched.admit_or_enqueue(other, cb)           # -> device 1
+    blocked = mk_task("blocked", mem_gb=9.0)
+    assert not sched.admit_or_enqueue(blocked, cb)     # both full
+    evicted = sched.mark_dead(dev0)
+    assert [t.name for t in evicted] == ["res"]
+    # the evicted resident re-entered the waiter queue with restart priority:
+    # it is FIRST in line when the survivor frees
+    sched.task_end(other)
+    assert admitted[-1][0] == "res"
+    assert admitted[-1][1] == other.device
+    sched.task_end(resident)
+    assert admitted[-1][0] == "blocked"                # then the blocked task
+    assert sched.waiting_count() == 0
+
+
+def test_stale_completion_from_evicted_run_is_fenced():
+    """A task evicted mid-run whose old incarnation later calls task_end must
+    not release the re-admitted incarnation's resources (epoch fence)."""
+    sched = MGBAlg3Scheduler(2)
+    epochs = []
+    cb = lambda t, dev, epoch: epochs.append((dev, epoch))
+    t = mk_task("t", mem_gb=9.0)
+    sched.admit_or_enqueue(t, cb)
+    dev0, epoch0 = epochs[-1]
+    sched.mark_dead(dev0)                 # evict + auto re-enqueue + drain
+    assert len(epochs) == 2               # re-admitted on the survivor
+    dev1, epoch1 = epochs[-1]
+    assert dev1 != dev0 and epoch1 == epoch0 + 1
+    # stale completion from the superseded run: fenced no-op
+    assert sched.task_end(t, epoch=epoch0) is False
+    assert sched.devices[dev1].used_hbm == t.resources.hbm_bytes
+    # current completion releases for real
+    assert sched.task_end(t, epoch=epoch1) is True
+    assert sched.devices[dev1].used_hbm == 0
+
+
+def test_revive_lets_waiters_land_on_revived_device():
+    sched = MGBAlg2Scheduler(2)
+    sched.mark_dead(1)
+    hog = mk_task("hog", demand=1.0)
+    assert sched.task_begin(hog) == 0        # device 0 compute-exclusive
+    admitted = []
+    w = mk_task("w", demand=1.0)
+    assert not sched.admit_or_enqueue(
+        w, lambda t, dev, epoch: admitted.append(dev))
+    sched.revive(1)                          # wakeup: waiter fits on device 1
+    assert admitted == [1]
+    assert w.device == 1
+
+
+def test_mark_dead_fails_never_feasible_waiters_instead_of_deadlock():
+    """If the fleet shrinks to where a parked waiter can NEVER run, the
+    waiter's callback fires with placement None (give up) — without this the
+    executor would wait for a wakeup that can never come."""
+    sched = MGBAlg3Scheduler(2)
+    results = []
+    cb = lambda t, dev, epoch: results.append((t.name, dev))
+    hog = mk_task("hog", mem_gb=9.0)
+    assert sched.admit_or_enqueue(hog, cb)
+    waiter = mk_task("w", mem_gb=9.0)
+    sched.task_begin(mk_task("hog2", mem_gb=9.0))     # fill the other device
+    assert not sched.admit_or_enqueue(waiter, cb)
+    # kill the OTHER device: waiter still feasible on hog's -> stays parked
+    sched.mark_dead(1 - hog.device)
+    assert sched.waiting_count() >= 1
+    # kill hog's device too: nothing alive can ever host 9 GB -> cb(None)
+    sched.mark_dead(hog.device)
+    assert ("w", None) in results
+    assert ("hog", None) in results                   # evicted hog gives up too
+    assert sched.waiting_count() == 0
+
+
+def test_executor_crashes_jobs_when_fleet_dies_no_hang():
+    sched = MGBAlg3Scheduler(2)
+    ex = Executor(sched, workers=2)
+    jobs = [mk_job(i, mem_gb=9.0, sleep=0.05) for i in range(6)]
+
+    def killer():
+        time.sleep(0.02)
+        sched.mark_dead(0)
+        sched.mark_dead(1)
+
+    th = threading.Thread(target=killer)
+    th.start()
+    stats = ex.run(jobs)                              # must NOT hang
+    th.join()
+    assert stats["completed"] + stats["crashed"] == 6
+    assert stats["crashed"] >= 1
+
+
+def test_task_begin_blocking_wakes_on_task_end():
+    sched = MGBAlg3Scheduler(1)
+    hog = mk_task("hog", mem_gb=10.0)
+    assert sched.task_begin(hog) == 0
+    got = []
+
+    def waiter():
+        got.append(sched.task_begin_blocking(mk_task("w", mem_gb=10.0)))
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    time.sleep(0.02)
+    assert not got                       # still parked, no spinning
+    sched.task_end(hog)                  # the wakeup
+    th.join(timeout=5.0)
+    assert got == [0]
+
+
+def test_task_begin_blocking_timeout_cancels_waiter():
+    sched = MGBAlg3Scheduler(1)
+    hog = mk_task("hog", mem_gb=10.0)
+    assert sched.task_begin(hog) == 0
+    assert sched.task_begin_blocking(mk_task("w", mem_gb=10.0),
+                                     timeout=0.02) is None
+    assert sched.waiting_count() == 0    # cancelled, not leaked
+
+
+# ---------------------------------------------------------------------------
+# run() edge cases + executor parity
+# ---------------------------------------------------------------------------
+
+def test_run_empty_returns_zeroed_metrics():
+    for cls in (Executor, PollingExecutor):
+        stats = cls(MGBAlg3Scheduler(2), workers=2).run([])
+        assert stats["completed"] == 0 and stats["crashed"] == 0
+        assert stats["makespan_s"] == 0.0
+        assert stats["throughput_jobs_per_s"] == 0.0
+        assert stats["mean_turnaround_s"] == 0.0
+
+
+def test_multi_task_jobs_run_tasks_in_order():
+    seen = []
+
+    def body_for(tag):
+        def body(device):
+            seen.append(tag)
+            time.sleep(0.001)
+        return body
+
+    tasks = [mk_task(f"j0.{k}", mem_gb=1.0) for k in range(3)]
+    job = ExecJob(job=Job(tasks=tasks, name="j0"),
+                  runners=[body_for(k) for k in range(3)])
+    stats = Executor(MGBAlg3Scheduler(2), workers=2).run([job])
+    assert stats["completed"] == 1
+    assert seen == [0, 1, 2]
+
+
+def test_event_and_polling_agree_on_outcome():
+    jobs = lambda: [mk_job(i, mem_gb=3.0) for i in range(10)]
+    ev = Executor(MGBAlg3Scheduler(2), workers=4).run(jobs())
+    po = PollingExecutor(MGBAlg3Scheduler(2), workers=4).run(jobs())
+    assert ev["completed"] == po["completed"] == 10
+    assert ev["crashed"] == po["crashed"] == 0

@@ -1,0 +1,169 @@
+"""Property tests (hypothesis, with the deterministic fallback): scheduler
+accounting invariants under random CONCURRENT begin/end interleavings.
+
+For every scheduler class, whatever interleaving of task_begin / task_end /
+admit_or_enqueue the threads produce, each device must always satisfy
+
+    used_hbm   == sum(resident task footprints)   (never negative)
+    used_slots == sum(resident slots_needed)      (never negative)
+
+and after every task ends, all counters return to exactly zero.
+"""
+import random
+import threading
+
+from _hypothesis_fallback import given, settings, st
+
+from repro.core.scheduler import (
+    CGScheduler, MemOnlyScheduler, MGBAlg2Scheduler, MGBAlg3Scheduler,
+    SAScheduler, SliceScheduler,
+)
+from repro.core.scheduler.base import slots_needed
+from repro.core.task import ResourceVector, Task, UnitTask
+
+GB = 1024**3
+
+ALL_CLASSES = [SAScheduler, CGScheduler, MemOnlyScheduler,
+               MGBAlg2Scheduler, MGBAlg3Scheduler]
+MEMORY_SAFE = [SAScheduler, MemOnlyScheduler,
+               MGBAlg2Scheduler, MGBAlg3Scheduler]
+
+
+def mk_task(name, mem_gb, demand, chips=1):
+    vec = ResourceVector(hbm_bytes=int(mem_gb * GB), flops=1e9,
+                         bytes_accessed=1e9, est_seconds=0.001,
+                         core_demand=demand, bw_demand=demand, chips=chips)
+    return Task(units=[UnitTask(fn=None, memobjs=frozenset({name}),
+                                resources=vec, name=name)], name=name)
+
+
+def assert_consistent(sched, *, memory_safe):
+    """Accounting invariant, checked atomically under the scheduler lock."""
+    with sched._lock:
+        devices = (sched.devices if hasattr(sched, "devices")
+                   else sched.chips.values())
+        for d in devices:
+            foot = sum(t.resources.hbm_bytes for t in d.residents.values())
+            slots = sum(slots_needed(t) for t in d.residents.values())
+            if not isinstance(sched, SliceScheduler):
+                assert d.used_hbm == foot, \
+                    f"dev {d.index}: used_hbm {d.used_hbm} != {foot}"
+            assert d.used_slots == slots, \
+                f"dev {d.index}: used_slots {d.used_slots} != {slots}"
+            assert d.used_hbm >= 0 and d.used_slots >= 0
+            if memory_safe:
+                assert d.used_hbm <= d.total_hbm
+
+
+def _worker(sched, seed, n_ops, memory_safe, errors):
+    rng = random.Random(seed)
+    held = []
+    try:
+        for i in range(n_ops):
+            if held and rng.random() < 0.45:
+                sched.task_end(held.pop(rng.randrange(len(held))))
+            else:
+                t = mk_task(f"w{seed}.{i}", rng.uniform(0.25, 10.0),
+                            rng.choice([0.0, 0.1, 0.5, 1.0]))
+                if rng.random() < 0.5:
+                    if sched.task_begin(t) is not None:
+                        held.append(t)
+                else:
+                    # waiter path: admission may fire later from another
+                    # thread's task_end; callbacks record the placement
+                    admitted = threading.Event()
+
+                    def cb(task, dev, epoch, admitted=admitted):
+                        admitted.set()
+
+                    if sched.admit_or_enqueue(t, cb):
+                        held.append(t)
+                    elif admitted.wait(0.001):
+                        held.append(t)
+                    else:
+                        # still parked: cancel so shutdown is clean
+                        if sched.cancel_wait(t):
+                            pass
+                        elif admitted.wait(1.0):
+                            held.append(t)
+            if i % 5 == 0:
+                assert_consistent(sched, memory_safe=memory_safe)
+        for t in held:
+            sched.task_end(t)
+    except BaseException as e:  # surfaced by the main thread
+        errors.append(e)
+
+
+@given(seed=st.integers(0, 10_000), n_threads=st.integers(2, 4))
+@settings(max_examples=8, deadline=None)
+def test_property_concurrent_interleavings_all_schedulers(seed, n_threads):
+    for cls in ALL_CLASSES:
+        sched = cls(3)
+        memory_safe = cls in MEMORY_SAFE
+        errors = []
+        threads = [threading.Thread(
+            target=_worker, args=(sched, seed * 13 + k, 30, memory_safe,
+                                  errors))
+            for k in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, f"{cls.__name__}: {errors[0]}"
+        # quiesce: drop any waiters left by racing cancels, then all zero
+        sched.cancel_all_waiters()
+        assert_consistent(sched, memory_safe=memory_safe)
+        for d in sched.devices:
+            assert d.used_hbm == 0 and d.used_slots == 0, cls.__name__
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_property_sequential_begin_end_interleavings(seed):
+    """Single-threaded seeded churn, heavier op count: exact accounting on
+    every scheduler class after every single event."""
+    for cls in ALL_CLASSES:
+        sched = cls(3)
+        memory_safe = cls in MEMORY_SAFE
+        rng = random.Random(seed)
+        held = []
+        for i in range(120):
+            if held and rng.random() < 0.4:
+                sched.task_end(held.pop(rng.randrange(len(held))))
+            else:
+                t = mk_task(f"s{i}", rng.uniform(0.25, 12.0),
+                            rng.choice([0.0, 0.25, 0.75, 1.0]))
+                if sched.task_begin(t) is not None:
+                    held.append(t)
+            assert_consistent(sched, memory_safe=memory_safe)
+        for t in held:
+            sched.task_end(t)
+        for d in sched.devices:
+            assert d.used_hbm == 0 and d.used_slots == 0, cls.__name__
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_property_slice_scheduler_interleavings(seed):
+    """Slice scheduler: per-chip accounting stays consistent under seeded
+    begin/end churn of multi-chip tasks."""
+    sched = SliceScheduler(pods=1, rows=4, cols=4)
+    rng = random.Random(seed)
+    held = []
+    for i in range(60):
+        if held and rng.random() < 0.4:
+            sched.task_end(held.pop(rng.randrange(len(held))))
+        else:
+            chips = rng.choice([1, 2, 4])
+            t = mk_task(f"sl{i}", rng.uniform(0.5, 8.0) * chips,
+                        rng.choice([0.1, 0.5, 1.0]), chips=chips)
+            if sched.task_begin(t) is not None:
+                held.append(t)
+        assert_consistent(sched, memory_safe=True)
+        # per-chip share never oversubscribes a chip
+        for d in sched.chips.values():
+            assert 0 <= d.used_hbm <= d.total_hbm
+    for t in held:
+        sched.task_end(t)
+    assert all(d.used_hbm == 0 and d.used_slots == 0
+               for d in sched.chips.values())
