@@ -1,31 +1,43 @@
-"""Event-driven executor vs the old polling loop: makespan + scheduler
-overhead at queue depths 10 / 100 / 1000.
+"""Executor benchmarks: the event-driven engine vs the old polling loop
+(closed batch), plus the open-arrival streaming path.
 
-Protocol: N identical single-task jobs (2 GB, demand 0.25, ~3 ms of work)
-queued at t=0 on a 2-device MGB-Alg3 fleet.
+Closed-batch protocol: N identical single-task jobs (2 GB, demand 0.25,
+~10 ms of work) queued at t=0 on a 2-device MGB-Alg3 fleet.
 
   * **event** — the event-driven engine: admission wakeups, execution pool of
-    4 threads regardless of queue depth. Blocked jobs hold no thread.
+    16 threads regardless of queue depth. Blocked jobs hold no thread.
   * **polling** — the previous protocol: one worker thread per in-flight job
     spinning ``task_begin`` every 2 ms. To give N jobs concurrent admission
     progress it must burn N threads (capped at 256 here so depth 1000 does
     not exhaust the container), and every blocked thread pays a poll attempt
     each tick.
 
-Reported per run: makespan, scheduler admission attempts (``begin_attempts``:
-every ``select_device`` probe, successful or not), and attempts per job — the
-overhead metric that grows with queue depth under polling but stays flat
-under wakeups (the drain memoizes failed resource vectors, so a homogeneous
-queue costs O(admitted + 1) probes per wakeup).
+Open-arrival protocol (the serving story): requests arrive at the ``Cluster``
+front-end as a Poisson process and are ``submit``-ed while earlier requests
+are mid-flight. Reported: p50/p99 queueing delay (admission wait before the
+task starts) for the streaming path vs the same N requests declared as one
+closed batch — the batch inflates queueing delay because every job waits
+behind the whole backlog from t=0.
 
-    PYTHONPATH=src python -m benchmarks.bench_executor
+Reported per closed-batch run: makespan, scheduler admission attempts
+(``begin_attempts``: every ``select_device`` probe, successful or not), and
+attempts per job — the overhead metric that grows with queue depth under
+polling but stays flat under wakeups (the drain memoizes failed resource
+vectors, so a homogeneous queue costs O(admitted + 1) probes per wakeup).
+
+    PYTHONPATH=src python -m benchmarks.bench_executor            # full
+    PYTHONPATH=src python -m benchmarks.bench_executor --smoke    # CI guard
 """
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Dict, List
 
+import numpy as np
+
 from benchmarks.common import save_json
+from repro.core.cluster import Cluster, JobStatus
 from repro.core.executor import ExecJob, Executor, PollingExecutor
 from repro.core.scheduler import MGBAlg3Scheduler
 from repro.core.task import Job, ResourceVector, Task, UnitTask
@@ -41,16 +53,16 @@ WORK_S = 0.010
 POLL_S = 0.002
 
 
-def make_jobs(n: int) -> List[ExecJob]:
+def make_jobs(n: int, work_s: float = WORK_S) -> List[ExecJob]:
     vec = ResourceVector(hbm_bytes=2 * GB, flops=1e9, bytes_accessed=1e9,
-                         est_seconds=WORK_S, core_demand=0.25, bw_demand=0.25)
+                         est_seconds=work_s, core_demand=0.25, bw_demand=0.25)
     jobs = []
     for i in range(n):
         unit = UnitTask(fn=None, memobjs=frozenset({f"q{i}"}), resources=vec,
                         name=f"q{i}")
         jobs.append(ExecJob(
             job=Job(tasks=[Task(units=[unit], name=f"q{i}")], name=f"q{i}"),
-            runners=[lambda device: time.sleep(WORK_S)]))
+            runners=[lambda device, s=work_s: time.sleep(s)]))
     return jobs
 
 
@@ -70,7 +82,59 @@ def one(depth: int, mode: str) -> Dict[str, float]:
             "mean_turnaround_s": stats["mean_turnaround_s"]}
 
 
-def run(depths=DEPTHS) -> List[Dict[str, float]]:
+def _delays(records_per_job) -> np.ndarray:
+    """Queueing delay per task: admission wait before execution started."""
+    return np.array([r.t_start - r.t_queue
+                     for recs in records_per_job for r in recs
+                     if not r.crashed])
+
+
+def open_arrival(n: int, rate_hz: float, work_s: float = WORK_S
+                 ) -> List[Dict[str, float]]:
+    """Poisson arrivals at ``rate_hz`` streamed through Cluster.submit vs the
+    same N requests declared as one closed batch."""
+    rng = np.random.default_rng(0)
+    gaps = rng.exponential(1.0 / rate_hz, n)
+
+    # streaming: submit as requests arrive, earlier requests mid-flight
+    cluster = Cluster(MGBAlg3Scheduler(DEVICES), workers=EVENT_POOL)
+    handles = []
+    t0 = time.monotonic()
+    for i, gap in enumerate(gaps):
+        time.sleep(gap)
+        handles.append(cluster.submit(make_jobs(1, work_s)[0],
+                                      deadline_s=1.0))
+    cluster.drain()
+    stream_wall = time.monotonic() - t0
+    assert all(h.status is JobStatus.DONE for h in handles)
+    stream_d = _delays(h.records for h in handles)
+    cluster.shutdown()
+
+    # closed batch: same N jobs, all declared up front
+    ex = Executor(MGBAlg3Scheduler(DEVICES), workers=EVENT_POOL)
+    t0 = time.monotonic()
+    stats = ex.run(make_jobs(n, work_s))
+    batch_wall = time.monotonic() - t0
+    assert stats["completed"] == n
+    batch_d = _delays([ex.records])
+
+    rows = []
+    for mode, d, wall in (("stream", stream_d, stream_wall),
+                          ("batch", batch_d, batch_wall)):
+        rows.append({
+            "mode": f"open-{mode}", "n": n, "rate_hz": rate_hz,
+            "wall_s": wall,
+            "p50_queue_ms": float(np.percentile(d, 50)) * 1e3,
+            "p99_queue_ms": float(np.percentile(d, 99)) * 1e3,
+        })
+        print(f"open-arrival {mode:>7}: n={n} rate={rate_hz:.0f}/s "
+              f"wall={wall:.2f}s queue p50={rows[-1]['p50_queue_ms']:.1f}ms "
+              f"p99={rows[-1]['p99_queue_ms']:.1f}ms")
+    return rows
+
+
+def run(depths=DEPTHS, *, arrival_n: int = 200, arrival_rate: float = 150.0,
+        smoke: bool = False) -> List[Dict[str, float]]:
     rows = []
     print(f"{'depth':>6} {'mode':>8} {'makespan':>10} {'attempts':>9} "
           f"{'att/job':>8} {'turnaround':>11}")
@@ -93,9 +157,26 @@ def run(depths=DEPTHS) -> List[Dict[str, float]]:
           f"({ev[d1] / max(ev[d0], 1e-9):.1f}x), "
           f"polling {po[d0]:.1f} -> {po[d1]:.1f} "
           f"({po[d1] / max(po[d0], 1e-9):.1f}x)")
-    save_json("bench_executor.json", rows)
+    rows += open_arrival(arrival_n, arrival_rate)
+    if not smoke:
+        save_json("bench_executor.json", rows)
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny depths + short arrivals; asserts completion "
+                         "without writing results (the CI bitrot guard)")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = run(depths=(5, 20), arrival_n=24, arrival_rate=400.0,
+                   smoke=True)
+        assert len(rows) == 6, rows
+        print("bench_executor --smoke OK")
+    else:
+        run()
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -5,7 +5,9 @@
     2. build GPU tasks (Alg. 1 merges kernels sharing buffers);
     3. probe each task's resource vector from the XLA compiled artifact;
     4. let the MGB scheduler place them on a 2-device system;
-    5. execute for real through the live executor.
+    5. execute for real — twice: once through the one-shot ``Executor.run``
+       shim (closed batch), once through the streaming ``Cluster.submit``
+       path (open arrival, the serving front door).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lazy
+from repro.core.cluster import Cluster, JobStatus
 from repro.core.executor import ExecJob, Executor
 from repro.core.probe import probe_fn
 from repro.core.scheduler import MGBAlg3Scheduler
@@ -80,6 +83,7 @@ def main():
                   name=app_id)
         return ExecJob(job=job, runners=[runner], buffers=mybufs)
 
+    # one-shot compatibility shim: declare the whole batch, run, report
     ex = Executor(sched, workers=2)
     stats = ex.run([make_app("app1"), make_app("app2")])
     print(f"executor: {stats['completed']} jobs done, "
@@ -87,6 +91,18 @@ def main():
     print("placements (task uid -> device):", sched.placements)
     print("results:", {k: round(v, 3) for k, v in results.items()})
     assert stats["completed"] == 2 and stats["crashed"] == 0
+
+    # streaming path: the same apps arrive one by one at a live Cluster —
+    # submit returns a JobHandle immediately, work may already be in flight,
+    # and priority/deadline stamps rank the admission queue
+    with Cluster(MGBAlg3Scheduler(num_devices=2), workers=2) as cluster:
+        h1 = cluster.submit(make_app("app3"), priority=1)
+        h2 = cluster.submit(make_app("app4"), deadline_s=5.0)  # EDF hint
+        print(f"streaming: submitted while h1 is {h1.status.value}; "
+              f"app4 records: {[r.task for r in h2.result(timeout=30)]}")
+        cluster.drain()
+        assert h1.status is JobStatus.DONE and h2.status is JobStatus.DONE
+    print("results:", {k: round(v, 3) for k, v in results.items()})
     print("quickstart OK")
 
 

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.configs.base import ShapeConfig
 from repro.configs.registry import get_arch
+from repro.core.cluster import Cluster, JobStatus
 from repro.core.executor import ExecJob, Executor
 from repro.core.probe import probe_fn
 from repro.core.scheduler import MGBAlg3Scheduler, SAScheduler
@@ -136,10 +137,15 @@ def main():
           f"(all work landed on the surviving device)")
     assert stats3["completed"] + stats3["crashed"] == len(jobs3)
 
-    print("\n-- decode fleet: 64 queued decode tasks, execution pool of 2 --")
-    # the serving-scale path: every request is a task; blocked requests park
-    # in the scheduler's waiter queue (no thread each) and completions wake
-    # the next admission. One jitted prefill is shared by the whole fleet.
+    print("\n-- decode fleet: 64 streamed decode requests, pool of 2, "
+          "open arrival --")
+    # the serving-scale path: every request is a task submitted to the live
+    # Cluster AS IT ARRIVES — no pre-declared batch. Blocked requests park
+    # in the scheduler's admission queue (no thread each) and completions
+    # wake the next admission. Decode traffic is submitted at priority 5 so
+    # it outranks the background training job streamed alongside it, and
+    # each request carries a deadline (EDF within the priority class). One
+    # jitted prefill is shared by the whole fleet.
     cfg = get_arch("zamba2-2.7b").reduced()
     prefill = jax.jit(make_prefill_step(cfg, attn_impl="flash_jnp"))
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -155,21 +161,29 @@ def main():
         logits, _ = prefill(params, fleet_batch)
         jax.block_until_ready(logits)
 
-    fleet = []
-    for i in range(64):
-        name = f"decode-{i}"
-        unit = UnitTask(fn=None, memobjs=frozenset({name}), resources=vec,
-                        name=name)
-        fleet.append(ExecJob(
-            job=Job(tasks=[Task(units=[unit], name=name)], name=name),
-            runners=[decode_runner]))
-    sched4 = MGBAlg3Scheduler(num_devices=2)
     t0 = time.time()
-    stats4 = Executor(sched4, workers=2).run(fleet)
-    print(f"completed={stats4['completed']}/64 in {time.time() - t0:.2f}s "
-          f"with 2 pool threads "
-          f"({stats4['sched_attempts']} admission attempts)")
-    assert stats4["completed"] == 64
+    with Cluster(MGBAlg3Scheduler(num_devices=2), workers=2) as cluster:
+        background = cluster.submit(make_train_job("gemma2-9b", 7),
+                                    priority=0)
+        handles = []
+        for i in range(64):
+            name = f"decode-{i}"
+            unit = UnitTask(fn=None, memobjs=frozenset({name}),
+                            resources=vec, name=name)
+            handles.append(cluster.submit(
+                ExecJob(job=Job(tasks=[Task(units=[unit], name=name)],
+                                name=name),
+                        runners=[decode_runner]),
+                priority=5, deadline_s=30.0))
+        first = handles[0].result(timeout=60)   # a single request's future
+        cluster.drain()
+        stats4 = cluster.stats()
+    done = sum(1 for h in handles if h.status is JobStatus.DONE)
+    print(f"completed={done}/64 decode + background train "
+          f"{background.status.value} in {time.time() - t0:.2f}s "
+          f"with 2 pool threads ({stats4['sched_attempts']} admission "
+          f"attempts; first request {len(first)} record(s))")
+    assert done == 64 and stats4["completed"] == 65
     print("\nshared_cluster OK")
 
 

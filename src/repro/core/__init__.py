@@ -3,8 +3,21 @@
 Pipeline (paper Fig. 2): task construction (taskgraph, Alg. 1) -> probes
 (probe: resource vectors from XLA compiled artifacts) -> lazy runtime (lazy:
 device-independent buffers) -> scheduler (scheduler.*: SA / CG / schedGPU
-baselines, MGB Alg. 2 + Alg. 3, slice-level) -> execution (executor: live
-worker pool; simulator: discrete-event engine for W1-W8-scale studies).
+baselines, MGB Alg. 2 + Alg. 3, slice-level) -> execution (cluster: the
+open-arrival submission front-end; executor: live event-driven engine;
+simulator: discrete-event virtual-clock engine for W1-W8-scale studies).
 """
 from repro.core.task import Job, ResourceVector, Task, UnitTask  # noqa: F401
 from repro.core.taskgraph import build_gpu_tasks  # noqa: F401
+
+# Cluster/JobHandle/JobStatus are re-exported lazily (PEP 562): cluster.py
+# pulls in the live executor and therefore jax, which simulator-only and
+# task-only consumers must not pay for at import time.
+_CLUSTER_EXPORTS = ("Cluster", "JobHandle", "JobStatus")
+
+
+def __getattr__(name):
+    if name in _CLUSTER_EXPORTS:
+        from repro.core import cluster
+        return getattr(cluster, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

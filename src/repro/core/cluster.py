@@ -1,0 +1,267 @@
+"""Open-arrival submission front-end: the ``Cluster`` object jobs arrive at.
+
+The paper's scheduler is a daemon — probes submit tasks whenever a process
+reaches a launch point, not as a pre-declared batch. ``Cluster`` is that
+front door for this repo: ``submit`` may be called at ANY time (including
+while earlier jobs are mid-flight) and returns a future-like ``JobHandle``;
+``drain`` is the barrier; ``shutdown`` tears the engine down.
+
+    cluster = Cluster(MGBAlg3Scheduler(4), workers=4)
+    h = cluster.submit(ej, priority=5, deadline_s=2.0)
+    ...                        # keep submitting while it runs
+    recs = h.result(timeout=30)    # per-task ExecRecords
+    cluster.drain()
+
+Two interchangeable backends sit behind the same API:
+
+  * ``backend="live"`` — the event-driven ``Executor``: real jitted JAX
+    computations, wall-clock time, a bounded execution pool;
+  * ``backend="sim"``  — the discrete-event ``Simulator``: virtual clock,
+    processor-sharing interference model, no real execution. ``step()``
+    advances the clock so submissions can interleave with simulated
+    progress.
+
+Both route admission through the scheduler's OWN priority/deadline waiter
+queue, so the same submission trace produces the same admission order live
+and simulated — the property that makes simulator studies predictive of the
+serving path.
+
+Priority/deadline semantics (enforced in the scheduler's admission queue,
+not by this caller): higher ``priority`` admits first; within a priority
+class, earliest ``deadline_s`` first (EDF — a deadline is an ordering hint,
+not an enforcement: late tasks still run); no-deadline tasks rank after
+deadlined peers of their class; arrival order breaks remaining ties, and a
+task evicted by a device failure restarts at the front of its class.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+from repro.core.executor import ExecJob, ExecRecord, Executor, _JobRun
+from repro.core.scheduler.base import Scheduler
+from repro.core.simulator import Simulator, _JobState
+from repro.core.task import Job
+
+
+class JobStatus(enum.Enum):
+    QUEUED = "queued"        # submitted, not yet executing
+    RUNNING = "running"      # at least one task started
+    DONE = "done"            # all tasks completed
+    CRASHED = "crashed"      # OOM / runner exception / never feasible
+    CANCELLED = "cancelled"  # ended by JobHandle.cancel()
+
+
+class JobHandle:
+    """Future-like view of one submitted job, valid on either backend.
+
+    ``result(timeout)`` blocks (live: wall clock; sim: advances the virtual
+    clock) until the job resolves and returns its per-task ``ExecRecord``
+    list; check ``status`` to distinguish DONE from CRASHED/CANCELLED.
+    """
+
+    def __init__(self, cluster: "Cluster", job: Job,
+                 state: Union[_JobRun, _JobState]):
+        self._cluster = cluster
+        self.job = job
+        self._state = state
+
+    # -- lifecycle ----------------------------------------------------------
+    @property
+    def status(self) -> JobStatus:
+        s = self._state
+        finished = s.done.is_set() if isinstance(s, _JobRun) else s.done
+        if finished:
+            if s.cancelled:
+                return JobStatus.CANCELLED
+            if self.job.crashed:
+                return JobStatus.CRASHED
+            return JobStatus.DONE
+        return JobStatus.RUNNING if s.started else JobStatus.QUEUED
+
+    @property
+    def records(self) -> List[ExecRecord]:
+        """Per-task execution records accumulated so far (live wall times or
+        virtual-clock times, matching the backend)."""
+        return list(self._state.records)
+
+    def result(self, timeout: Optional[float] = None) -> List[ExecRecord]:
+        """Wait until the job resolves; returns its ``ExecRecord`` list.
+        Live backend: blocks up to ``timeout`` wall seconds (raises
+        ``TimeoutError`` on expiry). Sim backend: advances the virtual clock
+        until the job resolves (``timeout`` bounds virtual seconds)."""
+        s = self._state
+        if isinstance(s, _JobRun):
+            if not s.done.wait(timeout):
+                raise TimeoutError(f"job {self.job.name!r} still "
+                                   f"{self.status.value} after {timeout}s")
+        else:
+            sim = self._cluster._sim
+            limit = sim.now + timeout if timeout is not None else None
+            while not s.done:
+                if limit is not None and sim.now > limit:
+                    raise TimeoutError(f"job {self.job.name!r} still "
+                                       f"{self.status.value} at virtual "
+                                       f"t={sim.now:.3f}")
+                if not sim.step():
+                    break  # simulation idle: job crashed-at-drain or stuck
+            if not s.done:
+                raise TimeoutError(
+                    f"job {self.job.name!r} cannot make progress")
+        return self.records
+
+    def cancel(self) -> bool:
+        """Cancel the job: a parked/queued job ends immediately (its waiter
+        leaves the scheduler's admission queue with no state leaked); a
+        running task finishes its current kernel first. Returns False iff
+        the job had already finished; True otherwise — the job then reports
+        CANCELLED (or CRASHED if its in-flight kernel crashes)."""
+        return self._cluster._cancel(self._state)
+
+
+class Cluster:
+    """The open-arrival submission surface over a scheduler + backend."""
+
+    def __init__(self, scheduler: Scheduler, *, workers: Optional[int] = None,
+                 backend: str = "live",
+                 devices: Optional[Sequence[object]] = None,
+                 poll_interval: float = 0.05, crash_delay: float = 8.0):
+        self.sched = scheduler
+        self.backend = backend
+        n_workers = workers if workers is not None \
+            else len(scheduler.devices)
+        self._ex: Optional[Executor] = None
+        self._sim: Optional[Simulator] = None
+        if backend == "live":
+            self._ex = Executor(scheduler, workers=n_workers,
+                                devices=devices)
+        elif backend == "sim":
+            self._sim = Simulator(scheduler, workers=n_workers,
+                                  poll_interval=poll_interval,
+                                  crash_delay=crash_delay)
+        else:
+            raise ValueError(f"unknown backend {backend!r} "
+                             "(expected 'live' or 'sim')")
+        self.handles: List[JobHandle] = []
+        self._attempts0 = getattr(scheduler, "begin_attempts", 0)
+        self._submit_lock = threading.Lock()
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, job: Union[Job, ExecJob], *,
+               runners: Optional[List[Callable]] = None,
+               priority: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> JobHandle:
+        """Submit ``job`` NOW — at any time, including while earlier jobs are
+        executing. ``priority`` (higher first) and ``deadline_s`` (seconds
+        from submission; EDF within a priority class) rank the job in the
+        scheduler's admission queue; leaving either None keeps any stamp
+        already on the Job (default class 0, no deadline). Live backend
+        wants an ``ExecJob`` (or a ``Job`` plus ``runners``); the sim
+        backend takes a plain ``Job``. Returns a ``JobHandle``
+        immediately."""
+        with self._submit_lock:
+            if self._ex is not None:
+                ej = self._as_execjob(job, runners)
+                deadline_t = (time.monotonic() + deadline_s
+                              if deadline_s is not None else None)
+                state: Union[_JobRun, _JobState] = self._ex.submit(
+                    ej, priority=priority, deadline_t=deadline_t)
+                handle = JobHandle(self, ej.job, state)
+            else:
+                plain = job.job if isinstance(job, ExecJob) else job
+                deadline_t = (self._sim.now + deadline_s
+                              if deadline_s is not None else None)
+                state = self._sim.submit(plain, priority=priority,
+                                         deadline_t=deadline_t)
+                handle = JobHandle(self, plain, state)
+            self.handles.append(handle)
+            return handle
+
+    @staticmethod
+    def _as_execjob(job: Union[Job, ExecJob],
+                    runners: Optional[List[Callable]]) -> ExecJob:
+        if isinstance(job, ExecJob):
+            return job
+        if runners is None:
+            # placement/ordering studies on the live engine: tasks place,
+            # execute instantly, release
+            runners = [(lambda device: None)] * len(job.tasks)
+        if len(runners) != len(job.tasks):
+            raise ValueError(f"{len(runners)} runners for "
+                             f"{len(job.tasks)} tasks")
+        return ExecJob(job=job, runners=list(runners))
+
+    def _cancel(self, state: Union[_JobRun, _JobState]) -> bool:
+        if isinstance(state, _JobRun):
+            return self._ex.cancel(state)
+        return self._sim.cancel(state)
+
+    # -- barriers / clock ----------------------------------------------------
+    def drain(self) -> None:
+        """Barrier: block (live) or advance the virtual clock (sim) until
+        every job submitted so far has resolved. New submissions remain legal
+        afterwards — drain is a checkpoint, not a shutdown."""
+        if self._ex is not None:
+            self._ex.drain()
+        else:
+            self._sim.drain()
+
+    def step(self) -> bool:
+        """Sim backend: advance the virtual clock one event (False when
+        idle). Live backend: no-op False — wall time advances on its own."""
+        if self._sim is not None:
+            return self._sim.step()
+        return False
+
+    @property
+    def now(self) -> float:
+        """Current time on the backend's clock (virtual for sim)."""
+        return self._sim.now if self._sim is not None else time.monotonic()
+
+    def shutdown(self) -> None:
+        """Drain, then stop the live execution pool (sim: just drains).
+        The cluster is reusable — the next ``submit`` restarts the pool."""
+        if self._ex is not None:
+            self._ex.shutdown()
+        else:
+            self._sim.drain()
+
+    def __enter__(self) -> "Cluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- metrics -------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        """Aggregate metrics over every job submitted so far, with the same
+        keys ``Executor.run`` reports (plus ``cancelled``). Times are wall
+        seconds (live) or virtual seconds (sim)."""
+        jobs = [h.job for h in self.handles]
+        done = [h for h in self.handles if h.status is JobStatus.DONE]
+        crashed = sum(1 for h in self.handles
+                      if h.status is JobStatus.CRASHED)
+        cancelled = sum(1 for h in self.handles
+                        if h.status is JobStatus.CANCELLED)
+        if not jobs:
+            return {"makespan_s": 0.0, "throughput_jobs_per_s": 0.0,
+                    "completed": 0, "crashed": 0, "mean_turnaround_s": 0.0,
+                    "sched_attempts": 0, "cancelled": 0}
+        t0 = min(j.arrival_t for j in jobs)
+        t1 = max((j.finish_t for j in jobs if j.finish_t >= 0),
+                 default=t0)
+        makespan = max(t1 - t0, 1e-9)
+        return {
+            "makespan_s": makespan,
+            "throughput_jobs_per_s": len(done) / makespan,
+            "completed": len(done),
+            "crashed": crashed,
+            "cancelled": cancelled,
+            "mean_turnaround_s": sum(
+                h.job.finish_t - h.job.arrival_t for h in done
+                ) / max(len(done), 1),
+            "sched_attempts":
+                getattr(self.sched, "begin_attempts", 0) - self._attempts0,
+        }

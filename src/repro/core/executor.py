@@ -5,14 +5,21 @@ TPU analogue).
 
 Engine shape (the paper's daemon, in-process):
 
+  * **open arrival**: ``submit(ej)`` may be called at ANY time — including
+    while earlier jobs are mid-flight — exactly like probes arriving at the
+    paper's daemon. ``run(jobs)`` survives as the closed-batch compatibility
+    shim (submit everything, drain, report);
   * a single **dispatcher** owns the pending work: each job submits its next
     task via ``Scheduler.admit_or_enqueue`` — a blocked task holds NO thread,
-    it sits in the scheduler's FIFO waiter queue;
+    it sits in the scheduler's priority/deadline admission queue;
   * every ``task_end`` re-drives admission (the paper's *notify*), and the
     admission callback pushes the (task, device) pair onto a **bounded
     execution pool** sized to the device count, not the job count;
   * completion callbacks advance the owning job to its next task (or finish
-    it), so thousands of queued jobs need only ``workers`` threads.
+    it), so thousands of queued jobs need only ``workers`` threads;
+  * ``drain()`` is the barrier (wait until every submitted job resolved),
+    ``shutdown()`` tears the pool down. ``repro.core.cluster.Cluster`` is the
+    user-facing front-end over this engine.
 
 ``PollingExecutor`` preserves the previous worker-pool protocol — one thread
 per in-flight job spinning ``task_begin`` in a sleep(poll) loop — as the
@@ -73,10 +80,18 @@ def _empty_stats() -> Dict[str, float]:
 
 @dataclasses.dataclass
 class _JobRun:
-    """Dispatcher-side job state: which task is next, when it was queued."""
+    """Dispatcher-side job state: which task is next, when it was queued,
+    plus the open-arrival lifecycle bits ``JobHandle`` observes."""
     ej: ExecJob
     next_task: int = 0
     t_queue: float = 0.0
+    started: bool = False
+    cancel_requested: bool = False
+    cancelled: bool = False
+    on_done: Optional[Callable[["_JobRun"], None]] = None
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    records: List[ExecRecord] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -89,7 +104,8 @@ class _Ready:
 
 
 class Executor:
-    """Event-driven executor: admission wakeups, bounded execution pool."""
+    """Event-driven executor: open-arrival submission, admission wakeups,
+    bounded execution pool."""
 
     def __init__(self, scheduler: Scheduler, *, workers: int,
                  devices: Optional[Sequence[object]] = None,
@@ -104,133 +120,257 @@ class Executor:
         self.device_map = [real[i % len(real)] for i in range(n)]
         self.records: List[ExecRecord] = []
         self._rec_lock = threading.Lock()
+        # open-arrival engine state
+        self._ready: Optional["queue_mod.Queue[Optional[_Ready]]"] = None
+        self._threads: List[threading.Thread] = []
+        self._running = False
+        self._lifecycle = threading.Lock()     # guards start/shutdown
+        self._state = threading.Condition()    # guards _inflight
+        self._inflight = 0
 
-    # -- engine -------------------------------------------------------------
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        """Spin up the execution pool; idempotent (``submit`` auto-starts)."""
+        with self._lifecycle:
+            self._start_locked()
+
+    def _start_locked(self) -> None:
+        if self._running:
+            return
+        self._ready = queue_mod.Queue()
+        self._threads = [threading.Thread(target=self._pool_worker,
+                                          daemon=True)
+                         for _ in range(self.workers)]
+        for t in self._threads:
+            t.start()
+        self._running = True
+
+    def drain(self) -> None:
+        """Barrier: block until every job submitted so far has resolved
+        (done, crashed, or cancelled). Jobs submitted while draining extend
+        the wait — the barrier is over the in-flight count, not a snapshot."""
+        with self._state:
+            while self._inflight:
+                self._state.wait()
+
+    def shutdown(self) -> None:
+        """Drain, then stop the pool threads. ``submit`` restarts it. A
+        ``submit`` racing shutdown either lands before the teardown (the
+        re-drain below picks it up) or blocks on the lifecycle lock and
+        restarts a fresh pool — never lost."""
+        while True:
+            self.drain()
+            with self._lifecycle:
+                if not self._running:
+                    return
+                with self._state:
+                    if self._inflight:
+                        continue  # a submit raced the drain: wait again
+                for _ in self._threads:
+                    self._ready.put(None)
+                for t in self._threads:
+                    t.join()
+                self._threads = []
+                self._running = False
+                return
+
+    # -- open-arrival API ----------------------------------------------------
+    def submit(self, ej: ExecJob, *, priority: Optional[int] = None,
+               deadline_t: Optional[float] = None,
+               on_done: Optional[Callable[[_JobRun], None]] = None
+               ) -> _JobRun:
+        """Enter ``ej`` into the admission path NOW — legal at any time,
+        including while earlier jobs are mid-flight. ``priority`` /
+        ``deadline_t`` stamp every task of the job (None keeps stamps already
+        on the job); the scheduler's admission queue enforces the ordering.
+        Returns the job's ``_JobRun`` (wrap it in a ``cluster.JobHandle`` for
+        the user-facing future API)."""
+        job = ej.job
+        if priority is not None:
+            job.priority = priority
+        if deadline_t is not None:
+            job.deadline_t = deadline_t
+        for t in job.tasks:
+            t.priority = job.priority
+            t.deadline_t = job.deadline_t
+        jr = _JobRun(ej, on_done=on_done)
+        job.arrival_t = time.monotonic()
+        with self._lifecycle:
+            # pool-start + in-flight increment are atomic w.r.t. shutdown's
+            # teardown check, so a racing submit is never stranded
+            self._start_locked()
+            with self._state:
+                self._inflight += 1
+        if not job.tasks:
+            # empty job: nothing to place — finish immediately with a zeroed
+            # record instead of indexing runners[0]
+            now = time.monotonic()
+            self._record(jr, ExecRecord(job.name, "", -1, now, now, now))
+            self._finish(jr, crashed=False)
+        else:
+            self._submit_next(jr)
+        return jr
+
+    def cancel(self, jr: _JobRun) -> bool:
+        """Cancel: a parked waiter is removed from the admission queue
+        immediately (no scheduler state leaks); a running task finishes its
+        current kernel, then the job stops advancing. Returns False iff the
+        job had already finished (too late); True otherwise — the job then
+        ends CANCELLED (or CRASHED, if its in-flight kernel crashes). The
+        flag is raised under the finish lock, so a True return can never be
+        contradicted by a DONE status."""
+        with self._state:
+            if jr.done.is_set():
+                return jr.cancelled
+            jr.cancel_requested = True
+        idx = jr.next_task
+        tasks = jr.ej.job.tasks
+        if idx < len(tasks) and self.sched.cancel_wait(tasks[idx]):
+            # it was parked: the admission callback can never fire now
+            self._finish(jr, crashed=False, cancelled=True)
+        # else admitted or mid-handoff: the execute/completion/finish path
+        # sees the flag
+        return True
+
+    # -- compatibility shim ---------------------------------------------------
     def run(self, jobs: Sequence[ExecJob]) -> Dict[str, float]:
+        """Closed-batch protocol: submit every job, drain, report. Kept as a
+        thin shim over the open-arrival engine (metrics keys unchanged)."""
         if not jobs:
             return _empty_stats()
         attempts0 = getattr(self.sched, "begin_attempts", 0)
-        ready: "queue_mod.Queue[Optional[_Ready]]" = queue_mod.Queue()
-        state_lock = threading.Lock()
-        all_done = threading.Event()
-        remaining = [len(jobs)]
-
-        def finish(jr: _JobRun, *, crashed: bool) -> None:
-            jr.ej.job.crashed = jr.ej.job.crashed or crashed
-            jr.ej.job.finish_t = time.monotonic()
-            lazy.free_all(jr.ej.buffers)
-            with state_lock:
-                remaining[0] -= 1
-                if remaining[0] == 0:
-                    all_done.set()
-
-        def submit_next(jr: _JobRun) -> None:
-            idx = jr.next_task
-            task = jr.ej.job.tasks[idx]
-            jr.t_queue = time.monotonic()
-            if not self.sched.can_ever_fit(task):
-                # never feasible on any alive device: crash-at-submit instead
-                # of waiting forever in the queue
-                now = time.monotonic()
-                with self._rec_lock:
-                    self.records.append(ExecRecord(
-                        jr.ej.job.name, task.name, -1, jr.t_queue, now, now,
-                        crashed=True))
-                finish(jr, crashed=True)
-                return
-
-            def on_admit(t: Task, device: Optional[int], epoch: int,
-                         jr=jr, idx=idx) -> None:
-                # fires under task_end/notify of *another* task (or inline on
-                # immediate admission): just hand off to the execution pool.
-                # device None = the fleet shrank to where this task can never
-                # run (mark_dead sweep): crash the job instead of waiting
-                if device is None:
-                    now = time.monotonic()
-                    with self._rec_lock:
-                        self.records.append(ExecRecord(
-                            jr.ej.job.name, t.name, -1, jr.t_queue, now, now,
-                            crashed=True))
-                    finish(jr, crashed=True)
-                    return
-                ready.put(_Ready(jr, idx, device, epoch))
-
-            self.sched.admit_or_enqueue(task, on_admit)
-
-        def execute(item: _Ready) -> None:
-            jr, task = item.jr, item.jr.ej.job.tasks[item.task_idx]
-            dev_idx = item.device
-            # evicted while queued for the pool (device died): the re-admitted
-            # incarnation owns this task now — drop the stale work item
-            if self.sched.admission_epoch(task) != item.epoch:
-                return
-            # memory-unsafe scheduler may have oversubscribed: OOM crash
-            if self.sched.devices[dev_idx].oom():
-                if not self.sched.task_end(task, epoch=item.epoch):
-                    return  # fenced: evicted + re-admitted elsewhere mid-check
-                now = time.monotonic()
-                with self._rec_lock:
-                    self.records.append(ExecRecord(
-                        jr.ej.job.name, task.name, dev_idx, jr.t_queue,
-                        now, now, crashed=True))
-                finish(jr, crashed=True)
-                return
-            t_start = time.monotonic()
-            crashed = False
-            try:
-                # lazy runtime: replay buffer queues on the chosen device,
-                # then launch the real computation
-                device = self.device_map[dev_idx]
-                lazy.kernel_launch_prepare(jr.ej.buffers, device)
-                jr.ej.runners[item.task_idx](device)
-            except Exception:
-                crashed = True
-            # epoch fence: if the device died mid-run the task was evicted and
-            # re-enqueued — this completion is stale, the fresh incarnation
-            # owns the job's progress (and the resources were already freed)
-            current = self.sched.task_end(task, epoch=item.epoch)
-            if not current:
-                return
-            if crashed:
-                now = time.monotonic()
-                with self._rec_lock:
-                    self.records.append(ExecRecord(
-                        jr.ej.job.name, task.name, dev_idx, jr.t_queue,
-                        t_start, now, crashed=True))
-                finish(jr, crashed=True)
-                return
-            with self._rec_lock:
-                self.records.append(ExecRecord(
-                    jr.ej.job.name, task.name, dev_idx, jr.t_queue, t_start,
-                    time.monotonic()))
-            jr.next_task += 1
-            if jr.next_task >= len(jr.ej.job.tasks):
-                finish(jr, crashed=False)
-            else:
-                submit_next(jr)
-
-        def pool_worker() -> None:
-            while True:
-                item = ready.get()
-                if item is None:
-                    return
-                execute(item)
-
-        threads = [threading.Thread(target=pool_worker, daemon=True)
-                   for _ in range(self.workers)]
-        for t in threads:
-            t.start()
+        self.start()
         # deterministic arrival order: jobs enter the admission path in the
-        # order given, so FIFO waiter wakeups replay the submission sequence
+        # order given, so queue-rank wakeups replay the submission sequence
         for ej in jobs:
-            ej.job.arrival_t = time.monotonic()
-            submit_next(_JobRun(ej))
-        all_done.wait()
-        for _ in threads:
-            ready.put(None)
-        for t in threads:
-            t.join()
+            self.submit(ej)
+        self.drain()
+        self.shutdown()
         return self._stats(jobs, attempts0)
+
+    # -- engine internals -----------------------------------------------------
+    def _record(self, jr: _JobRun, rec: ExecRecord) -> None:
+        with self._rec_lock:
+            self.records.append(rec)
+            jr.records.append(rec)
+
+    def _finish(self, jr: _JobRun, *, crashed: bool,
+                cancelled: bool = False) -> None:
+        with self._state:
+            if jr.done.is_set():
+                return  # double-finish guard (cancel raced a completion)
+            # a cancel requested before this point wins over DONE (matching
+            # the sim backend, where the completion path checks the flag
+            # even on the job's last task); a crash stays a crash
+            if jr.cancel_requested and not crashed:
+                cancelled = True
+            jr.ej.job.crashed = jr.ej.job.crashed or crashed
+            jr.cancelled = cancelled
+            jr.ej.job.finish_t = time.monotonic()
+            jr.done.set()
+            self._inflight -= 1
+            if self._inflight == 0:
+                self._state.notify_all()
+        lazy.free_all(jr.ej.buffers)
+        if jr.on_done is not None:
+            jr.on_done(jr)
+
+    def _submit_next(self, jr: _JobRun) -> None:
+        if jr.cancel_requested:
+            self._finish(jr, crashed=False, cancelled=True)
+            return
+        idx = jr.next_task
+        task = jr.ej.job.tasks[idx]
+        jr.t_queue = time.monotonic()
+        if not self.sched.can_ever_fit(task):
+            # never feasible on any alive device: crash-at-submit instead
+            # of waiting forever in the queue
+            now = time.monotonic()
+            self._record(jr, ExecRecord(
+                jr.ej.job.name, task.name, -1, jr.t_queue, now, now,
+                crashed=True))
+            self._finish(jr, crashed=True)
+            return
+
+        def on_admit(t: Task, device: Optional[int], epoch: int,
+                     jr=jr, idx=idx) -> None:
+            # fires under task_end/notify of *another* task (or inline on
+            # immediate admission): just hand off to the execution pool.
+            # device None = the fleet shrank to where this task can never
+            # run (mark_dead sweep): crash the job instead of waiting
+            if device is None:
+                now = time.monotonic()
+                self._record(jr, ExecRecord(
+                    jr.ej.job.name, t.name, -1, jr.t_queue, now, now,
+                    crashed=True))
+                self._finish(jr, crashed=True)
+                return
+            self._ready.put(_Ready(jr, idx, device, epoch))
+
+        self.sched.admit_or_enqueue(task, on_admit)
+
+    def _execute(self, item: _Ready) -> None:
+        jr, task = item.jr, item.jr.ej.job.tasks[item.task_idx]
+        dev_idx = item.device
+        # evicted while queued for the pool (device died): the re-admitted
+        # incarnation owns this task now — drop the stale work item
+        if self.sched.admission_epoch(task) != item.epoch:
+            return
+        if jr.cancel_requested:
+            # cancelled between admission and execution: release the
+            # admission (it holds device resources) and end the job
+            if self.sched.task_end(task, epoch=item.epoch):
+                self._finish(jr, crashed=False, cancelled=True)
+            return
+        # memory-unsafe scheduler may have oversubscribed: OOM crash
+        if self.sched.devices[dev_idx].oom():
+            if not self.sched.task_end(task, epoch=item.epoch):
+                return  # fenced: evicted + re-admitted elsewhere mid-check
+            now = time.monotonic()
+            self._record(jr, ExecRecord(
+                jr.ej.job.name, task.name, dev_idx, jr.t_queue,
+                now, now, crashed=True))
+            self._finish(jr, crashed=True)
+            return
+        t_start = time.monotonic()
+        jr.started = True
+        crashed = False
+        try:
+            # lazy runtime: replay buffer queues on the chosen device,
+            # then launch the real computation
+            device = self.device_map[dev_idx]
+            lazy.kernel_launch_prepare(jr.ej.buffers, device)
+            jr.ej.runners[item.task_idx](device)
+        except Exception:
+            crashed = True
+        # epoch fence: if the device died mid-run the task was evicted and
+        # re-enqueued — this completion is stale, the fresh incarnation
+        # owns the job's progress (and the resources were already freed)
+        current = self.sched.task_end(task, epoch=item.epoch)
+        if not current:
+            return
+        if crashed:
+            now = time.monotonic()
+            self._record(jr, ExecRecord(
+                jr.ej.job.name, task.name, dev_idx, jr.t_queue,
+                t_start, now, crashed=True))
+            self._finish(jr, crashed=True)
+            return
+        self._record(jr, ExecRecord(
+            jr.ej.job.name, task.name, dev_idx, jr.t_queue, t_start,
+            time.monotonic()))
+        jr.next_task += 1
+        if jr.next_task >= len(jr.ej.job.tasks):
+            self._finish(jr, crashed=False)
+        else:
+            self._submit_next(jr)
+
+    def _pool_worker(self) -> None:
+        while True:
+            item = self._ready.get()
+            if item is None:
+                return
+            self._execute(item)
 
     def _stats(self, jobs: Sequence[ExecJob], attempts0: int
                ) -> Dict[str, float]:

@@ -12,10 +12,15 @@ three flavours:
     sched.task_end(task)                # frees resources, re-drives waiters
 
 ``admit_or_enqueue`` is the serving-scale path: a blocked task holds **no**
-thread — it sits in a FIFO waiter queue and every ``task_end`` (or ``revive``)
-re-drives admission in arrival order, firing the stored callback with the
-placement. ``mark_dead`` evicts residents; evicted tasks that were admitted
-through the waiter path are re-enqueued at the *front* of the queue (priority
+thread — it sits in an *admission queue* ordered by (priority desc, deadline
+EDF, arrival FIFO) and every ``task_end`` (or ``revive``) re-drives admission
+in that order, firing the stored callback with the placement. The ordering is
+enforced here, in the queue itself: callers just stamp ``task.priority`` /
+``task.deadline_t`` (``Cluster.submit`` does this per job) and park. Within
+one priority class arrival order is stable; tasks with deadlines rank by
+earliest absolute deadline ahead of deadline-less peers of the same priority.
+``mark_dead`` evicts residents; evicted tasks that were admitted through the
+waiter path are re-enqueued at the *front of their priority class* (eviction
 restart) and their callback fires again when they land on a surviving device.
 
 Stale completions (a task evicted mid-run whose old incarnation later calls
@@ -29,11 +34,11 @@ device is never selected and its residents re-enter the queue).
 """
 from __future__ import annotations
 
-import collections
+import bisect
 import dataclasses
 import math
 import threading
-from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.task import Task
 
@@ -100,11 +105,25 @@ class DeviceState:
 class _Waiter:
     task: Task
     callback: AdmitCallback
+    priority: int = 0
+    deadline_t: Optional[float] = None
+    restart: bool = False       # evicted resident re-entering its class front
+    seq: int = 0                # arrival order (negative for restarts)
+
+    @property
+    def key(self) -> Tuple[int, int, float, int]:
+        """Admission rank: priority class desc, eviction-restarts at the
+        front of their class, then EDF (no deadline sorts last), then stable
+        arrival order."""
+        return (-self.priority, 0 if self.restart else 1,
+                self.deadline_t if self.deadline_t is not None else math.inf,
+                self.seq)
 
 
 class WaiterQueueMixin:
-    """Waiter queue + wakeup machinery shared by ``Scheduler`` and
-    ``SliceScheduler`` (the paper's notify path).
+    """Admission queue + wakeup machinery shared by ``Scheduler`` and
+    ``SliceScheduler`` (the paper's notify path), ordered by priority /
+    deadline / arrival (see ``_Waiter.key``).
 
     Host class contract: ``self._lock`` (a ``threading.Lock``) and
     ``self._admit_locked(task) -> Optional[placement]`` (admission under the
@@ -113,12 +132,28 @@ class WaiterQueueMixin:
     """
 
     def _init_waiters(self) -> None:
-        self._waiters: Deque[_Waiter] = collections.deque()
+        # kept sorted by _Waiter.key; the drain scans it in rank order
+        self._waiters: List[_Waiter] = []
+        self._seq = 0           # arrival counter (FIFO within a class)
+        self._restart_seq = 0   # decreasing: newest restart leads its class
         # uid -> callback for tasks admitted through the waiter path; consulted
         # by mark_dead to re-enqueue evicted tasks
         self._admit_cbs: Dict[int, AdmitCallback] = {}
         # uid -> admission epoch; bumped on eviction to fence stale task_ends
         self._epochs: Dict[int, int] = {}
+
+    def _enqueue_locked(self, task: Task, callback: AdmitCallback, *,
+                        restart: bool = False) -> _Waiter:
+        if restart:
+            self._restart_seq -= 1
+            seq = self._restart_seq
+        else:
+            self._seq += 1
+            seq = self._seq
+        w = _Waiter(task, callback, getattr(task, "priority", 0),
+                    getattr(task, "deadline_t", None), restart, seq)
+        bisect.insort(self._waiters, w, key=lambda x: x.key)
+        return w
 
     # -- host hooks ---------------------------------------------------------
     def _admit_locked(self, task: Task):  # pragma: no cover - abstract
@@ -133,16 +168,17 @@ class WaiterQueueMixin:
     # -- admission ----------------------------------------------------------
     def admit_or_enqueue(self, task: Task, callback: AdmitCallback) -> bool:
         """Try to admit ``task``; on success fire ``callback`` immediately,
-        otherwise park it in the FIFO waiter queue (no thread is held). The
-        callback fires exactly once per admission, possibly again after an
-        eviction + re-admission. If the fleet later shrinks (``mark_dead``)
-        to where the task can NEVER be admitted, the callback fires once with
+        otherwise park it in the admission queue (no thread is held), ranked
+        by the task's ``priority`` / ``deadline_t`` stamps. The callback fires
+        exactly once per admission, possibly again after an eviction +
+        re-admission. If the fleet later shrinks (``mark_dead``) to where the
+        task can NEVER be admitted, the callback fires once with
         ``placement=None`` — the caller must give up, not retry. Returns True
         iff admitted immediately."""
         with self._lock:
             placement = self._admit_locked(task)
             if placement is None:
-                self._waiters.append(_Waiter(task, callback))
+                self._enqueue_locked(task, callback)
                 return False
             self._admit_cbs[task.uid] = callback
             epoch = self._epochs.get(task.uid, 0)
@@ -175,20 +211,20 @@ class WaiterQueueMixin:
     _DRAIN_MEMO = 32
 
     def _drain_locked(self) -> List[Tuple[_Waiter, Any, int]]:
-        """FIFO scan: admit every now-feasible waiter in arrival order,
-        keeping still-infeasible ones queued (older tasks always get first
-        claim on freed capacity; a too-big head does not block smaller tasks
-        behind it, which avoids head-of-line deadlock).
+        """Rank-order scan: admit every now-feasible waiter in admission-rank
+        order (priority desc, EDF, arrival), keeping still-infeasible ones
+        queued. Higher-ranked tasks always get first claim on freed capacity,
+        but a too-big head does not block smaller tasks behind it — they are
+        probed in turn, which avoids head-of-line deadlock.
 
         Waiters whose resource vector already failed in THIS pass are skipped
         without a probe — identical requirements at the same instant see
         identical feasibility — so a homogeneous fleet (thousands of equal
         decode tasks) costs O(admitted + 1) per wakeup, not O(queue)."""
         fired: List[Tuple[_Waiter, Any, int]] = []
-        still: Deque[_Waiter] = collections.deque()
+        still: List[_Waiter] = []
         failed: List[Any] = []  # ResourceVectors infeasible this pass
-        while self._waiters:
-            w = self._waiters.popleft()
+        for w in self._waiters:  # already sorted by rank
             res = w.task.resources
             if any(f == res for f in failed):
                 still.append(w)
@@ -228,19 +264,31 @@ class WaiterQueueMixin:
             return [w.task for w in self._waiters]
 
     def cancel_wait(self, task: Task) -> bool:
-        """Remove ``task`` from the waiter queue. True iff it was waiting."""
+        """Remove ``task`` from the admission queue, dropping its stored
+        callback so a cancelled waiter leaks no wakeup state. True iff it
+        was waiting (then its callback is guaranteed never to fire again).
+
+        The ``_epochs`` entry is deliberately KEPT: if the waiter is an
+        eviction restart, the superseded run may still be mid-kernel, and
+        deleting the bumped epoch would let its late ``task_end(epoch=old)``
+        pass the staleness fence. Epoch entries persist after normal
+        completion too, so this leaks nothing new."""
         with self._lock:
             for w in self._waiters:
                 if w.task.uid == task.uid:
                     self._waiters.remove(w)
+                    self._admit_cbs.pop(task.uid, None)
                     return True
         return False
 
     def cancel_all_waiters(self) -> List[Task]:
         """Drop every waiter (caller decides their fate — e.g. the simulator
-        counts never-feasible ones as crashed-at-submit)."""
+        counts never-feasible ones as crashed-at-submit). Epochs are kept,
+        as in ``cancel_wait``."""
         with self._lock:
             out = [w.task for w in self._waiters]
+            for w in self._waiters:
+                self._admit_cbs.pop(w.task.uid, None)
             self._waiters.clear()
             return out
 
@@ -259,7 +307,7 @@ class WaiterQueueMixin:
         the last task_end wakeup has fired. Returns (waiter, None, epoch)
         tuples for ``_fire``: placement None tells the caller to give up."""
         failed: List[Tuple[_Waiter, Any, int]] = []
-        still: Deque[_Waiter] = collections.deque()
+        still: List[_Waiter] = []
         for w in self._waiters:
             if self.can_ever_fit(w.task):
                 still.append(w)
@@ -269,15 +317,17 @@ class WaiterQueueMixin:
         return failed
 
     def _requeue_evicted_locked(self, evicted: Sequence[Task]) -> None:
-        """Re-enqueue evicted waiter-path tasks at the FRONT of the queue
-        (restart priority), bumping their epoch so the superseded run's
-        ``task_end`` becomes a fenced no-op."""
-        for t in reversed(evicted):  # reversed + appendleft keeps their order
+        """Re-enqueue evicted waiter-path tasks at the FRONT of their
+        priority class (eviction restart), bumping their epoch so the
+        superseded run's ``task_end`` becomes a fenced no-op. A restart never
+        jumps a *higher* priority class — it only leads its own."""
+        # reversed + decreasing restart seq keeps the evicted tasks' order
+        for t in reversed(evicted):
             cb = self._admit_cbs.pop(t.uid, None)
             if cb is None:
                 continue  # legacy task_begin admission: caller re-drives
             self._epochs[t.uid] = self._epochs.get(t.uid, 0) + 1
-            self._waiters.appendleft(_Waiter(t, cb))
+            self._enqueue_locked(t, cb, restart=True)
 
 
 class Scheduler(WaiterQueueMixin):

@@ -1,26 +1,33 @@
-"""Discrete-event simulator for batch job mixes under a scheduler.
+"""Discrete-event simulator for job mixes under a scheduler.
 
-Reproduces the paper's evaluation protocol (§V-A): a queue full of jobs at
-t=0, a pool of workers that each dequeue a job, run its GPU tasks under the
-scheduler, and pull the next. Task progress follows the processor-sharing
-interference model (repro.core.interference): residents of an oversubscribed
-chip dilate by the total core demand.
+Reproduces the paper's evaluation protocol (§V-A) and doubles as the
+virtual-clock backend of ``repro.core.cluster.Cluster``: jobs may be
+submitted at any virtual time (``submit``), the clock advances event by
+event (``step`` / ``drain``), and a pool of workers each dequeue a job, run
+its GPU tasks under the scheduler, and pull the next. ``run(jobs)`` is the
+closed-batch compatibility wrapper (everything arrives at t=0). Task progress
+follows the processor-sharing interference model (repro.core.interference):
+residents of an oversubscribed chip dilate by the total core demand.
+
+Admission goes through the scheduler's OWN waiter queue — the same
+priority/deadline-ordered wakeup path the live executor uses — so simulated
+and live submissions of one trace produce the same admission order.
 
 Crash semantics (paper Table II): a memory-oblivious scheduler (CG) may admit
 a task whose footprint exceeds the device's free HBM — the job then dies with
 OOM, exactly like a failed cudaMalloc. Memory-safe schedulers (SA, MGB,
 schedGPU) never trigger this path.
 
-The simulator is deterministic given (jobs, scheduler, workers) and is the
-engine behind benchmarks/fig4, fig5, table2, table3, table4, fig6.
+The simulator is deterministic given (submission trace, scheduler, workers)
+and is the engine behind benchmarks/fig4, fig5, table2, table3, table4, fig6.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import interference
+from repro.core.executor import ExecRecord
 from repro.core.scheduler.base import Scheduler
 from repro.core.task import Job, Task
 
@@ -38,6 +45,7 @@ class SimResult:
     dilations: Dict[str, float]    # per-task wall dilation incl. sharing
     device_busy: List[float]       # per-device busy seconds
     utilization: float             # mean busy fraction over makespan
+    cancelled: int = 0             # jobs ended by JobHandle.cancel()
 
     @property
     def mean_turnaround(self) -> float:
@@ -67,11 +75,17 @@ class _Running:
 class _JobState:
     job: Job
     next_task: int = 0
-    worker: Optional[int] = None
+    t_queue: float = 0.0   # virtual time the current task entered admission
+    started: bool = False
+    done: bool = False
+    cancelled: bool = False
+    cancel_requested: bool = False
+    records: List[ExecRecord] = dataclasses.field(default_factory=list)
 
 
 class Simulator:
-    """Event-driven processor-sharing simulation of the worker-pool protocol."""
+    """Event-driven processor-sharing simulation of the worker-pool protocol
+    with an open-arrival front door (``submit`` / ``step`` / ``drain``)."""
 
     def __init__(self, scheduler: Scheduler, *, workers: int,
                  poll_interval: float = 0.05, crash_delay: float = 8.0):
@@ -82,206 +96,327 @@ class Simulator:
         # data load) before the failed alloc — without this, crash cascades
         # are instantaneous and the unsafe scheduler's crash rate is inflated
         self.crash_delay = crash_delay
+        self.reset()
 
-    def run(self, jobs: Sequence[Job], *, time_limit: float = 1e7,
-            failure_at: Optional[Tuple[float, int]] = None) -> SimResult:
-        """``failure_at``: (time, device) — kill a device mid-run; its
-        resident jobs' tasks re-enter the queue (fault-tolerance path)."""
-        queue: List[_JobState] = [_JobState(j) for j in jobs]
-        for js in queue:
-            js.job.arrival_t = 0.0
+    # -- lifecycle ----------------------------------------------------------
+    def reset(self) -> None:
+        """Fresh virtual clock and empty state (``run`` calls this; open-
+        arrival users call it to reuse the object across traces)."""
+        self.now = 0.0
+        self.records: List[ExecRecord] = []
+        self._queue: List[_JobState] = []   # jobs waiting for a sim worker
         # admissions fired by the scheduler's waiter queue (the SAME wakeup
         # path the live executor uses, so sim and executor agree on placement
-        # sequence): callbacks append here, try_start drains
-        admitted_buf: List[Tuple[_JobState, Task, int]] = []
-        blocked: Dict[int, _JobState] = {}  # task uid -> job waiting in queue
-        running: Dict[int, _Running] = {}   # task uid -> running record
-        idle_workers = self.workers
-        now = 0.0
-        busy: List[float] = [0.0] * len(self.sched.devices)
-        slowdowns: Dict[str, float] = {}
-        dilations: Dict[str, float] = {}
-        solo: Dict[int, float] = {}
-        started: Dict[int, float] = {}
-        completed = crashed = 0
-        crashing: List[Tuple[float, _JobState]] = []  # (worker-free time, job)
-        turnaround: Dict[str, float] = {}
-        failure_pending = failure_at
+        # sequence): callbacks append here, _try_start drains
+        self._admitted_buf: List[Tuple[_JobState, Task, Optional[int]]] = []
+        self._blocked: Dict[int, _JobState] = {}  # task uid -> parked job
+        self._running: Dict[int, _Running] = {}   # task uid -> running record
+        self._idle_workers = self.workers
+        self._busy: List[float] = [0.0] * len(self.sched.devices)
+        self._slowdowns: Dict[str, float] = {}
+        self._dilations: Dict[str, float] = {}
+        self._solo: Dict[int, float] = {}
+        self._started_at: Dict[int, float] = {}
+        self._completed = 0
+        self._crashed = 0
+        self._cancelled = 0
+        self._crashing: List[Tuple[float, _JobState]] = []  # (free time, job)
+        self._turnaround: Dict[str, float] = {}
+        self._failure_pending: Optional[Tuple[float, int]] = None
 
-        def rates() -> Dict[int, Tuple[float, float]]:
-            """device -> (progress rate, per-kernel overhead factor)."""
-            by_dev: Dict[int, List[tuple]] = {}
-            for r in running.values():
-                res = r.task.resources
-                by_dev.setdefault(r.device, []).append(
-                    (res.core_demand, res.bw_demand))
-            return {d: (interference.rate(ds),
-                        1.0 + interference.ETA_PER_RESIDENT * (len(ds) - 1))
-                    for d, ds in by_dev.items()}
+    # -- open-arrival API ----------------------------------------------------
+    def submit(self, job: Job, *, priority: Optional[int] = None,
+               deadline_t: Optional[float] = None) -> _JobState:
+        """Submit ``job`` at the CURRENT virtual time — legal at any point,
+        including while earlier jobs are mid-flight (call ``step`` between
+        submissions to advance the clock). ``deadline_t`` is an absolute
+        virtual-clock deadline; the scheduler's admission queue enforces the
+        priority/EDF ordering."""
+        if priority is not None:
+            job.priority = priority
+        if deadline_t is not None:
+            job.deadline_t = deadline_t
+        for t in job.tasks:
+            t.priority = job.priority
+            t.deadline_t = job.deadline_t
+        job.arrival_t = self.now
+        js = _JobState(job)
+        if not job.tasks:
+            # empty job: completes instantly with a zeroed record, holding no
+            # worker (mirrors the live executor's empty-tasks path)
+            rec = ExecRecord(job.name, "", -1, self.now, self.now, self.now)
+            js.records.append(rec)
+            self.records.append(rec)
+            js.done = True
+            job.finish_t = self.now
+            self._completed += 1
+            self._turnaround[job.name or str(job.uid)] = 0.0
+            return js
+        self._queue.append(js)
+        self._try_start()
+        return js
 
-        def submit(js: _JobState) -> None:
-            """Hand the job's next task to the scheduler's admission path:
-            admitted now (callback fires inline) or parked in the waiter
-            queue — wakeups on task_end/mark_dead/revive re-drive it."""
-            task = js.job.tasks[js.next_task]
-            blocked[task.uid] = js
+    def cancel(self, js: _JobState) -> bool:
+        """Cancel a submitted job: a job still waiting for a worker or parked
+        in the admission queue ends immediately (no scheduler state leaks); a
+        running task finishes its current kernel first. True iff the job will
+        end (or ended) cancelled."""
+        if js.done:
+            return js.cancelled
+        js.cancel_requested = True
+        if js in self._queue:               # never reached a worker
+            self._queue.remove(js)
+            self._end_cancelled(js, held_worker=False)
+            return True
+        idx = js.next_task
+        tasks = js.job.tasks
+        if idx < len(tasks):
+            t = tasks[idx]
+            if t.uid in self._blocked and self.sched.cancel_wait(t):
+                del self._blocked[t.uid]
+                self._end_cancelled(js, held_worker=True)
+                return True
+        # running (or admitted): the completion path honours the flag
+        return True
 
-            def cb(t: Task, placement: int, epoch: int, js=js) -> None:
-                admitted_buf.append((js, t, placement))
-
-            self.sched.admit_or_enqueue(task, cb)
-
-        def try_start() -> None:
-            nonlocal idle_workers, crashed, completed
-            # workers pick jobs from the queue while any are idle
-            while idle_workers > 0 and queue:
-                js = queue.pop(0)
-                idle_workers -= 1
-                submit(js)
-            # drain admissions (task_end inside this loop can fire more)
-            while admitted_buf:
-                js, task, dev = admitted_buf.pop(0)
-                blocked.pop(task.uid, None)
-                if dev is None:
-                    # mark_dead shrank the fleet below this task's needs:
-                    # the scheduler gave up on it — crashed at submit
-                    js.job.crashed = True
-                    js.job.finish_t = now
-                    _finish_job(js, crashed_job=True)
-                    continue
-                # memory-unsafe scheduler: admitted past capacity -> OOM
-                # crash after the startup delay (worker stays occupied)
-                if self.sched.devices[dev].oom():
-                    self.sched.task_end(task)
-                    js.job.crashed = True
-                    crashing.append((now + self.crash_delay, js))
-                    continue
-                task.start_t = now
-                started[task.uid] = now
-                solo[task.uid] = task.resources.est_seconds
-                running[task.uid] = _Running(task, js, task.resources.est_seconds,
-                                             dev)
-
-        def _finish_job(js: _JobState, crashed_job: bool = False) -> None:
-            nonlocal idle_workers, crashed, completed
-            if crashed_job:
-                crashed += 1
+    def step(self) -> bool:
+        """Advance the virtual clock to the next event (a task completion, a
+        crash reap, an injected failure, or a poll tick when everything is
+        parked). Returns False when nothing is pending."""
+        if not self.pending():
+            return False
+        if not self._running and self._crashing:
+            self.now = min(t for t, _ in self._crashing)
+            self._reap_crashed()
+            self._try_start()
+            return True
+        if not self._running:
+            # nothing progresses: either a failure is pending or every
+            # submitted task is parked in the admission queue
+            if self._failure_pending is not None \
+                    and self._failure_pending[0] <= self.now + self.poll:
+                self.now = max(self.now, self._failure_pending[0])
             else:
-                completed += 1
-                js.job.finish_t = now
-                turnaround[js.job.name or str(js.job.uid)] = \
-                    now - js.job.arrival_t
-            idle_workers += 1
+                self.now += self.poll
+            self._maybe_fail()
+            self._try_start()
+            if not self._running and self._failure_pending is None \
+                    and not self._queue and not self._admitted_buf \
+                    and self._blocked:
+                # waiting tasks can never start (nothing running holds the
+                # capacity they need): count them as crashed-at-submit to
+                # avoid livelock
+                for t in self.sched.cancel_all_waiters():
+                    js = self._blocked.pop(t.uid, None)
+                    if js is not None:
+                        js.job.crashed = True
+                        js.job.finish_t = self.now
+                        self._finish_job(js, crashed_job=True)
+                self._blocked.clear()
+                return False
+            return True
+        rt = self._rates()
+        # next event: earliest task completion at current rates (a
+        # completion's task_end IS the wakeup that re-drives admission —
+        # no poll tick needed for waiters), or the injected failure
+        dt = min((r.remaining / rt[r.device][0]
+                  for r in self._running.values()),
+                 default=float("inf"))
+        if self._crashing:
+            dt = min(dt, max(min(t for t, _ in self._crashing) - self.now,
+                             0.0))
+        if self._failure_pending is not None:
+            dt = min(dt, max(self._failure_pending[0] - self.now, 0.0))
+        dt = max(dt, _EPS)
+        # advance; accumulate per-kernel overhead against work done
+        for r in self._running.values():
+            rate_d, overhead_d = rt[r.device]
+            work = dt * rate_d
+            r.remaining -= work
+            r.kwork += work * overhead_d
+        for d in {r.device for r in self._running.values()}:
+            self._busy[d] += dt
+        self.now += dt
+        self._reap_crashed()
+        self._maybe_fail()
+        self._complete_finished()
+        self._try_start()
+        return True
 
-        def reap_crashed() -> None:
-            nonlocal crashing
-            done = [(t, js) for t, js in crashing if t <= now + _EPS]
-            crashing = [(t, js) for t, js in crashing if t > now + _EPS]
-            for _, js in done:
-                js.job.finish_t = now
-                _finish_job(js, crashed_job=True)
+    def pending(self) -> bool:
+        """True while any submitted work is unresolved."""
+        return bool(self._running or self._queue or self._crashing
+                    or self._blocked or self._admitted_buf)
 
-        try_start()
-        while running or queue or crashing or blocked or admitted_buf:
-            if now > time_limit:
+    def drain(self, time_limit: float = 1e7) -> "SimResult":
+        """Barrier: advance the clock until every submitted job resolved
+        (or ``time_limit`` virtual seconds passed); returns the result so
+        far. Parked waiters that can never start are crashed, mirroring the
+        closed-batch protocol."""
+        while self.pending():
+            if self.now > time_limit:
                 break
-            if not running and crashing:
-                now = min(t for t, _ in crashing)
-                reap_crashed()
-                try_start()
-                continue
-            if not running:
-                # nothing progresses: either a failure is pending or every
-                # submitted task is parked in the waiter queue
-                if failure_pending is not None and failure_pending[0] <= now + self.poll:
-                    now = max(now, failure_pending[0])
-                else:
-                    now += self.poll
-                try_start()
-                if not running and not queue and not blocked \
-                        and not admitted_buf:
-                    break
-                if not running and failure_pending is None and not queue:
-                    # waiting tasks can never start (e.g. task > device HBM):
-                    # count them as crashed-at-submit to avoid livelock
-                    for t in self.sched.cancel_all_waiters():
-                        js = blocked.pop(t.uid, None)
-                        if js is not None:
-                            js.job.crashed = True
-                            _finish_job(js, crashed_job=True)
-                    blocked.clear()
-                    break
-                if not running:
-                    continue
-            rt = rates()
-            # next event: earliest task completion at current rates (a
-            # completion's task_end IS the wakeup that re-drives admission —
-            # no poll tick needed for waiters), or the injected failure
-            dt_done = min((r.remaining / rt[r.device][0]
-                           for r in running.values()),
-                          default=float("inf"))
-            dt = dt_done
-            if crashing:
-                dt = min(dt, max(min(t for t, _ in crashing) - now, 0.0))
-            if failure_pending is not None:
-                dt = min(dt, max(failure_pending[0] - now, 0.0))
-            dt = max(dt, _EPS)
-            # advance; accumulate per-kernel overhead against work done
-            for r in running.values():
-                rate_d, overhead_d = rt[r.device]
-                work = dt * rate_d
-                r.remaining -= work
-                r.kwork += work * overhead_d
-            for d, ds in _group_devices(running).items():
-                busy[d] += dt
-            now += dt
-            reap_crashed()
-            # failure injection
-            if failure_pending is not None and now >= failure_pending[0] - _EPS:
-                _, dead = failure_pending
-                failure_pending = None
-                # mark_dead re-enqueues evicted tasks through the waiter
-                # queue with restart priority; their admission callback may
-                # already have fired onto a surviving device (admitted_buf)
-                evicted = self.sched.mark_dead(dead)
-                for t in evicted:
-                    rec = running.pop(t.uid, None)
-                    if rec is not None:
-                        # restart from scratch on another device (task-level
-                        # checkpoint/restart is the executor's job)
-                        blocked.setdefault(t.uid, rec.job)
-            # completions
-            done = [uid for uid, r in running.items() if r.remaining <= 1e-9]
-            for uid in done:
-                rec = running.pop(uid)
-                self.sched.task_end(rec.task)
-                rec.task.finish_t = now
-                dur = now - started[uid]
-                if solo[uid] > 0:
-                    key = rec.task.name or str(uid)
-                    dilations[key] = dur / solo[uid]
-                    slowdowns[key] = rec.kwork / solo[uid]
-                js = rec.job
-                js.next_task += 1
-                if js.next_task >= len(js.job.tasks):
-                    _finish_job(js)
-                else:
-                    submit(js)
-            try_start()
+            if not self.step():
+                break
+        return self.result()
 
-        makespan = now
-        util = (sum(busy) / (len(busy) * makespan)) if makespan > 0 else 0.0
+    def result(self) -> SimResult:
+        """Metrics snapshot at the current virtual time. Safe on an empty or
+        partially-drained simulation: all means are guarded against empty
+        completion sets."""
+        makespan = self.now
+        n_dev = max(len(self._busy), 1)
+        util = (sum(self._busy) / (n_dev * makespan)) if makespan > 0 else 0.0
         return SimResult(
             makespan=makespan,
-            throughput=completed / makespan if makespan > 0 else 0.0,
-            completed=completed, crashed=crashed,
-            turnaround=turnaround, slowdowns=slowdowns, dilations=dilations,
-            device_busy=busy, utilization=util)
+            throughput=self._completed / makespan if makespan > 0 else 0.0,
+            completed=self._completed, crashed=self._crashed,
+            turnaround=dict(self._turnaround),
+            slowdowns=dict(self._slowdowns),
+            dilations=dict(self._dilations),
+            device_busy=list(self._busy), utilization=util,
+            cancelled=self._cancelled)
 
+    # -- compatibility wrapper ------------------------------------------------
+    def run(self, jobs: Sequence[Job], *, time_limit: float = 1e7,
+            failure_at: Optional[Tuple[float, int]] = None) -> SimResult:
+        """Closed-batch protocol: every job arrives at t=0, drain to the end.
+        ``failure_at``: (time, device) — kill a device mid-run; its resident
+        jobs' tasks re-enter the queue (fault-tolerance path)."""
+        self.reset()
+        self._failure_pending = failure_at
+        for j in jobs:
+            self.submit(j)
+        return self.drain(time_limit)
 
-def _group_devices(running: Dict[int, _Running]) -> Dict[int, List[tuple]]:
-    out: Dict[int, List[tuple]] = {}
-    for r in running.values():
-        res = r.task.resources
-        out.setdefault(r.device, []).append((res.core_demand, res.bw_demand))
-    return out
+    # -- engine internals -----------------------------------------------------
+    def _rates(self) -> Dict[int, Tuple[float, float]]:
+        """device -> (progress rate, per-kernel overhead factor)."""
+        by_dev: Dict[int, List[tuple]] = {}
+        for r in self._running.values():
+            res = r.task.resources
+            by_dev.setdefault(r.device, []).append(
+                (res.core_demand, res.bw_demand))
+        return {d: (interference.rate(ds),
+                    1.0 + interference.ETA_PER_RESIDENT * (len(ds) - 1))
+                for d, ds in by_dev.items()}
+
+    def _submit_task(self, js: _JobState) -> None:
+        """Hand the job's next task to the scheduler's admission path:
+        admitted now (callback fires inline) or parked in the waiter
+        queue — wakeups on task_end/mark_dead/revive re-drive it."""
+        task = js.job.tasks[js.next_task]
+        js.t_queue = self.now
+        self._blocked[task.uid] = js
+
+        def cb(t: Task, placement: Optional[int], epoch: int,
+               js=js) -> None:
+            self._admitted_buf.append((js, t, placement))
+
+        self.sched.admit_or_enqueue(task, cb)
+
+    def _try_start(self) -> None:
+        # workers pick jobs from the queue while any are idle
+        while self._idle_workers > 0 and self._queue:
+            js = self._queue.pop(0)
+            self._idle_workers -= 1
+            self._submit_task(js)
+        # drain admissions (task_end inside this loop can fire more)
+        while self._admitted_buf:
+            js, task, dev = self._admitted_buf.pop(0)
+            self._blocked.pop(task.uid, None)
+            if js.cancel_requested and dev is not None:
+                # cancelled while parked-then-admitted: release the admission
+                self.sched.task_end(task)
+                self._end_cancelled(js, held_worker=True)
+                continue
+            if dev is None:
+                # mark_dead shrank the fleet below this task's needs:
+                # the scheduler gave up on it — crashed at submit
+                js.job.crashed = True
+                js.job.finish_t = self.now
+                self._finish_job(js, crashed_job=True)
+                continue
+            # memory-unsafe scheduler: admitted past capacity -> OOM
+            # crash after the startup delay (worker stays occupied)
+            if self.sched.devices[dev].oom():
+                self.sched.task_end(task)
+                js.job.crashed = True
+                self._crashing.append((self.now + self.crash_delay, js))
+                continue
+            task.start_t = self.now
+            js.started = True
+            self._started_at[task.uid] = self.now
+            self._solo[task.uid] = task.resources.est_seconds
+            self._running[task.uid] = _Running(
+                task, js, task.resources.est_seconds, dev)
+
+    def _finish_job(self, js: _JobState, crashed_job: bool = False) -> None:
+        js.done = True
+        if crashed_job:
+            self._crashed += 1
+        else:
+            self._completed += 1
+            js.job.finish_t = self.now
+            self._turnaround[js.job.name or str(js.job.uid)] = \
+                self.now - js.job.arrival_t
+        self._idle_workers += 1
+
+    def _end_cancelled(self, js: _JobState, *, held_worker: bool) -> None:
+        js.done = True
+        js.cancelled = True
+        js.job.finish_t = self.now
+        self._cancelled += 1
+        if held_worker:
+            self._idle_workers += 1
+
+    def _reap_crashed(self) -> None:
+        done = [(t, js) for t, js in self._crashing if t <= self.now + _EPS]
+        self._crashing = [(t, js) for t, js in self._crashing
+                          if t > self.now + _EPS]
+        for _, js in done:
+            js.job.finish_t = self.now
+            self._finish_job(js, crashed_job=True)
+
+    def _maybe_fail(self) -> None:
+        if self._failure_pending is None \
+                or self.now < self._failure_pending[0] - _EPS:
+            return
+        _, dead = self._failure_pending
+        self._failure_pending = None
+        # mark_dead re-enqueues evicted tasks through the waiter queue with
+        # eviction-restart priority; their admission callback may already
+        # have fired onto a surviving device (admitted_buf)
+        evicted = self.sched.mark_dead(dead)
+        for t in evicted:
+            rec = self._running.pop(t.uid, None)
+            if rec is not None:
+                # restart from scratch on another device (task-level
+                # checkpoint/restart is the executor's job)
+                self._blocked.setdefault(t.uid, rec.job)
+
+    def _complete_finished(self) -> None:
+        done = [uid for uid, r in self._running.items()
+                if r.remaining <= 1e-9]
+        for uid in done:
+            rec = self._running.pop(uid)
+            self.sched.task_end(rec.task)
+            rec.task.finish_t = self.now
+            dur = self.now - self._started_at[uid]
+            if self._solo[uid] > 0:
+                key = rec.task.name or str(uid)
+                self._dilations[key] = dur / self._solo[uid]
+                self._slowdowns[key] = rec.kwork / self._solo[uid]
+            js = rec.job
+            record = ExecRecord(js.job.name, rec.task.name, rec.device,
+                                js.t_queue, self._started_at[uid], self.now)
+            js.records.append(record)
+            self.records.append(record)
+            if js.cancel_requested:
+                self._end_cancelled(js, held_worker=True)
+                continue
+            js.next_task += 1
+            if js.next_task >= len(js.job.tasks):
+                self._finish_job(js)
+            else:
+                self._submit_task(js)

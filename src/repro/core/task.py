@@ -71,6 +71,11 @@ class Task:
     units: List[UnitTask]
     name: str = ""
     uid: int = dataclasses.field(default_factory=lambda: next(_task_ids))
+    # admission class (read by the scheduler's waiter queue): higher priority
+    # is admitted first; within a priority class, earlier absolute deadline
+    # first (EDF), then submission order. Stamped job-wide by Cluster.submit.
+    priority: int = 0
+    deadline_t: Optional[float] = None
     # runtime bookkeeping (filled by scheduler/executor)
     device: Optional[int] = None
     arrival_t: float = 0.0
@@ -143,6 +148,9 @@ class Job:
     arrival_t: float = 0.0
     finish_t: float = -1.0
     crashed: bool = False
+    # admission class for every task in the job (see Task.priority)
+    priority: int = 0
+    deadline_t: Optional[float] = None
 
     @property
     def total_seconds(self) -> float:

@@ -1,15 +1,16 @@
 """End-to-end serving driver: batched prefill + decode under the
 compiler-guided scheduler — every request batch is a GPU task whose resource
 vector comes from the compiled prefill/decode executables (repro.core.probe),
-driven through the event-driven executor: requests are submitted up front,
-blocked batches hold no thread (they park in the scheduler's waiter queue),
-and completions wake the next admission. The execution pool is sized to the
-device count, so thousands of queued decode tasks need only a handful of
-threads.
+streamed through the open-arrival ``Cluster`` front-end: each request is
+``cluster.submit``-ed with a per-request deadline (EDF admission within its
+priority class), blocked batches hold no thread (they park in the
+scheduler's admission queue), and completions wake the next admission. The
+execution pool is sized to the device count, so thousands of queued decode
+tasks need only a handful of threads.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-        --requests 16 --batch 4 --prompt-len 64 --gen-len 32
+        --requests 16 --batch 4 --prompt-len 64 --gen-len 32 --deadline-s 5
 """
 from __future__ import annotations
 
@@ -21,7 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS, get_arch
-from repro.core.executor import ExecJob, Executor
+from repro.core.cluster import Cluster, JobStatus
+from repro.core.executor import ExecJob
 from repro.core.probe import probe_fn
 from repro.core.scheduler import MGBAlg3Scheduler
 from repro.core.task import Job, Task, UnitTask
@@ -31,7 +33,8 @@ from repro.serve.decode import greedy_generate, make_prefill_step
 
 def serve(arch: str, *, requests: int = 16, batch: int = 4,
           prompt_len: int = 64, gen_len: int = 32, seed: int = 0,
-          num_devices: int = 2, workers: int = 0) -> dict:
+          num_devices: int = 2, workers: int = 0,
+          deadline_s: float = 5.0) -> dict:
     cfg = get_arch(arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(seed))
     prefill = jax.jit(make_prefill_step(cfg, attn_impl="flash_jnp"))
@@ -49,7 +52,12 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
             (batch, prompt_len, cfg.d_model), dtype=np.float32))
     vec = probe_fn(prefill, params, probe_batch)
 
-    jobs = []
+    cluster = Cluster(sched, workers=workers or num_devices)
+    handles = []
+    t0 = time.time()
+    # open arrival: each request batch is submitted as it "comes in", with
+    # its own deadline — admission is EDF within the priority class, so
+    # earlier-deadline requests claim freed capacity first
     for i in range(n_batches):
         b = dict(probe_batch) if i == 0 else {
             "tokens": jnp.asarray(rng.integers(
@@ -68,20 +76,26 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
         task = Task(units=[UnitTask(fn=None, memobjs=frozenset({f"req{i}"}),
                                     resources=vec, name=f"req{i}")],
                     name=f"req{i}")
-        jobs.append(ExecJob(job=Job(tasks=[task], name=f"req{i}"),
-                            runners=[runner]))
+        handles.append(cluster.submit(
+            ExecJob(job=Job(tasks=[task], name=f"req{i}"), runners=[runner]),
+            deadline_s=deadline_s))
 
-    ex = Executor(sched, workers=workers or num_devices)
-    t0 = time.time()
-    stats = ex.run(jobs)
+    cluster.drain()
+    stats = cluster.stats()
+    cluster.shutdown()
     wall = time.time() - t0
     toks = stats["completed"] * batch * gen_len
-    lat = [r.t_end - r.t_start for r in ex.records if not r.crashed]
+    lat = [r.t_end - r.t_start
+           for h in handles for r in h.records if not r.crashed]
+    met = [h for h in handles if h.status is JobStatus.DONE
+           and h.records and h.records[-1].t_end
+           <= h.job.deadline_t]
     return {"requests": requests, "batches": n_batches,
             "tokens_generated": toks, "wall_s": wall,
             "tokens_per_s": toks / wall,
             "mean_batch_latency_s": float(np.mean(lat)) if lat else 0.0,
             "completed": stats["completed"], "crashed": stats["crashed"],
+            "deadlines_met": len(met),
             "sched_attempts": stats["sched_attempts"],
             "placements": sched.placements}
 
@@ -96,13 +110,17 @@ def main():
     ap.add_argument("--num-devices", type=int, default=2)
     ap.add_argument("--workers", type=int, default=0,
                     help="execution-pool size (0 = one per device)")
+    ap.add_argument("--deadline-s", type=float, default=5.0,
+                    help="per-request admission deadline (EDF ordering)")
     args = ap.parse_args()
     res = serve(args.arch, requests=args.requests, batch=args.batch,
                 prompt_len=args.prompt_len, gen_len=args.gen_len,
-                num_devices=args.num_devices, workers=args.workers)
+                num_devices=args.num_devices, workers=args.workers,
+                deadline_s=args.deadline_s)
     print(f"[serve] {res['tokens_generated']} tokens in {res['wall_s']:.1f}s "
           f"({res['tokens_per_s']:.1f} tok/s, "
           f"batch latency {res['mean_batch_latency_s'] * 1e3:.0f} ms, "
+          f"{res['deadlines_met']}/{res['batches']} deadlines met, "
           f"{res['sched_attempts']} admission attempts)")
 
 
