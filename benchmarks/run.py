@@ -9,8 +9,9 @@ import argparse
 import time
 
 from benchmarks import (
-    bench_executor, fig4_alg2_vs_alg3, fig5_throughput, fig6_nn_schedgpu,
-    kernels_bench, table2_crashes, table3_turnaround, table4_slowdown,
+    bench_executor, bench_gang, fig4_alg2_vs_alg3, fig5_throughput,
+    fig6_nn_schedgpu, kernels_bench, table2_crashes, table3_turnaround,
+    table4_slowdown,
 )
 
 EXPERIMENTS = {
@@ -22,6 +23,7 @@ EXPERIMENTS = {
     "fig6": fig6_nn_schedgpu.run,
     "kernels": kernels_bench.run,
     "executor": bench_executor.run,
+    "gang": bench_gang.run,
 }
 
 

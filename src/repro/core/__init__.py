@@ -3,9 +3,11 @@
 Pipeline (paper Fig. 2): task construction (taskgraph, Alg. 1) -> probes
 (probe: resource vectors from XLA compiled artifacts) -> lazy runtime (lazy:
 device-independent buffers) -> scheduler (scheduler.*: SA / CG / schedGPU
-baselines, MGB Alg. 2 + Alg. 3, slice-level) -> execution (cluster: the
-open-arrival submission front-end; executor: live event-driven engine;
-simulator: discrete-event virtual-clock engine for W1-W8-scale studies).
+baselines, MGB Alg. 2 + Alg. 3; gang/slice placement over the pod/mesh
+topology model in ``topology`` — contiguous device groups with ICI/DCN link
+accounting) -> execution (cluster: the open-arrival submission front-end;
+executor: live event-driven engine; simulator: discrete-event virtual-clock
+engine for W1-W8-scale studies).
 """
 from repro.core.task import Job, ResourceVector, Task, UnitTask  # noqa: F401
 from repro.core.taskgraph import build_gpu_tasks  # noqa: F401

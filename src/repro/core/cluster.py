@@ -28,10 +28,13 @@ serving path.
 
 Priority/deadline semantics (enforced in the scheduler's admission queue,
 not by this caller): higher ``priority`` admits first; within a priority
-class, earliest ``deadline_s`` first (EDF — a deadline is an ordering hint,
-not an enforcement: late tasks still run); no-deadline tasks rank after
-deadlined peers of their class; arrival order breaks remaining ties, and a
-task evicted by a device failure restarts at the front of its class.
+class, earliest ``deadline_s`` first (EDF — by default a deadline is an
+ordering hint, not an enforcement: late tasks still run); no-deadline tasks
+rank after deadlined peers of their class; arrival order breaks remaining
+ties, and a task evicted by a device failure restarts at the front of its
+class. With ``shed_late=True`` the deadline becomes (soft) enforcement: a
+job still PARKED when its deadline passes is failed with ``JobStatus.SHED``
+at the next admission drain instead of admitted late.
 """
 from __future__ import annotations
 
@@ -52,6 +55,8 @@ class JobStatus(enum.Enum):
     DONE = "done"            # all tasks completed
     CRASHED = "crashed"      # OOM / runner exception / never feasible
     CANCELLED = "cancelled"  # ended by JobHandle.cancel()
+    SHED = "shed"            # parked past its deadline, failed at a drain
+    #                          (only with shed_late=True deadline shedding)
 
 
 class JobHandle:
@@ -76,6 +81,8 @@ class JobHandle:
         if finished:
             if s.cancelled:
                 return JobStatus.CANCELLED
+            if s.shed:
+                return JobStatus.SHED
             if self.job.crashed:
                 return JobStatus.CRASHED
             return JobStatus.DONE
@@ -127,14 +134,24 @@ class Cluster:
     def __init__(self, scheduler: Scheduler, *, workers: Optional[int] = None,
                  backend: str = "live",
                  devices: Optional[Sequence[object]] = None,
-                 poll_interval: float = 0.05, crash_delay: float = 8.0):
+                 poll_interval: float = 0.05, crash_delay: float = 8.0,
+                 shed_late: bool = False):
         self.sched = scheduler
         self.backend = backend
+        # deadline enforcement (the shedding half): a parked waiter whose
+        # deadline already passed is failed with JobStatus.SHED at the next
+        # admission drain instead of being admitted late. Off by default —
+        # deadlines stay a pure EDF ordering hint unless the operator opts in
+        scheduler.shed_expired = shed_late
         n_workers = workers if workers is not None \
             else len(scheduler.devices)
         self._ex: Optional[Executor] = None
         self._sim: Optional[Simulator] = None
         if backend == "live":
+            # a scheduler previously driven by a Simulator has its _clock
+            # bound to that sim's (now frozen) virtual time: restore wall
+            # monotonic so deadline shedding judges live deadlines correctly
+            scheduler._clock = time.monotonic
             self._ex = Executor(scheduler, workers=n_workers,
                                 devices=devices)
         elif backend == "sim":
@@ -215,6 +232,13 @@ class Cluster:
             return self._sim.step()
         return False
 
+    def run_until(self, t: float) -> None:
+        """Sim backend: advance the virtual clock to exactly ``t`` (the
+        open-arrival driver — submit, run_until the next arrival, submit).
+        Live backend: no-op; wall time advances on its own."""
+        if self._sim is not None:
+            self._sim.run_until(t)
+
     @property
     def now(self) -> float:
         """Current time on the backend's clock (virtual for sim)."""
@@ -245,10 +269,11 @@ class Cluster:
                       if h.status is JobStatus.CRASHED)
         cancelled = sum(1 for h in self.handles
                         if h.status is JobStatus.CANCELLED)
+        shed = sum(1 for h in self.handles if h.status is JobStatus.SHED)
         if not jobs:
             return {"makespan_s": 0.0, "throughput_jobs_per_s": 0.0,
                     "completed": 0, "crashed": 0, "mean_turnaround_s": 0.0,
-                    "sched_attempts": 0, "cancelled": 0}
+                    "sched_attempts": 0, "cancelled": 0, "shed": 0}
         t0 = min(j.arrival_t for j in jobs)
         t1 = max((j.finish_t for j in jobs if j.finish_t >= 0),
                  default=t0)
@@ -259,6 +284,7 @@ class Cluster:
             "completed": len(done),
             "crashed": crashed,
             "cancelled": cancelled,
+            "shed": shed,
             "mean_turnaround_s": sum(
                 h.job.finish_t - h.job.arrival_t for h in done
                 ) / max(len(done), 1),

@@ -13,8 +13,11 @@ Engine shape (the paper's daemon, in-process):
     task via ``Scheduler.admit_or_enqueue`` — a blocked task holds NO thread,
     it sits in the scheduler's priority/deadline admission queue;
   * every ``task_end`` re-drives admission (the paper's *notify*), and the
-    admission callback pushes the (task, device) pair onto a **bounded
-    execution pool** sized to the device count, not the job count;
+    admission callback pushes the (task, placement) pair onto a **bounded
+    execution pool** sized to the device count, not the job count. A gang
+    placement (``GangReservation`` from the gang scheduler) dispatches the
+    task as ONE bound group: its runner receives the ordered device list of
+    the whole reservation;
   * completion callbacks advance the owning job to its next task (or finish
     it), so thousands of queued jobs need only ``workers`` threads;
   * ``drain()`` is the barrier (wait until every submitted job resolved),
@@ -44,8 +47,9 @@ from typing import Callable, Dict, List, Optional, Sequence
 import jax
 
 from repro.core import lazy
-from repro.core.scheduler.base import Scheduler
+from repro.core.scheduler.base import DEADLINE_SHED, Scheduler
 from repro.core.task import Job, Task
+from repro.core.topology import placement_devices
 
 
 class OOMError(RuntimeError):
@@ -56,11 +60,14 @@ class OOMError(RuntimeError):
 class ExecRecord:
     job: str
     task: str
-    device: int
+    device: int          # lead device of the placement (-1 = never placed)
     t_queue: float
     t_start: float
     t_end: float
     crashed: bool = False
+    # size of the reserved device group (1 for single-chip tasks); the gang
+    # bench groups queueing-delay percentiles by this
+    gang_chips: int = 1
 
 
 @dataclasses.dataclass
@@ -88,6 +95,7 @@ class _JobRun:
     started: bool = False
     cancel_requested: bool = False
     cancelled: bool = False
+    shed: bool = False      # parked past its deadline and shed at a drain
     on_done: Optional[Callable[["_JobRun"], None]] = None
     done: threading.Event = dataclasses.field(
         default_factory=threading.Event)
@@ -96,10 +104,12 @@ class _JobRun:
 
 @dataclasses.dataclass
 class _Ready:
-    """An admitted task waiting for an execution-pool thread."""
+    """An admitted task waiting for an execution-pool thread. ``placement``
+    is a device index (flat schedulers) or a ``GangReservation`` (gang
+    scheduler — the task's unit group runs bound to the whole device set)."""
     jr: _JobRun
     task_idx: int
-    device: int
+    placement: object
     epoch: int
 
 
@@ -193,6 +203,8 @@ class Executor:
         for t in job.tasks:
             t.priority = job.priority
             t.deadline_t = job.deadline_t
+            if t.gang_id is None:
+                t.gang_id = job.gang_id
         jr = _JobRun(ej, on_done=on_done)
         job.arrival_t = time.monotonic()
         with self._lifecycle:
@@ -255,7 +267,7 @@ class Executor:
             jr.records.append(rec)
 
     def _finish(self, jr: _JobRun, *, crashed: bool,
-                cancelled: bool = False) -> None:
+                cancelled: bool = False, shed: bool = False) -> None:
         with self._state:
             if jr.done.is_set():
                 return  # double-finish guard (cancel raced a completion)
@@ -266,6 +278,7 @@ class Executor:
                 cancelled = True
             jr.ej.job.crashed = jr.ej.job.crashed or crashed
             jr.cancelled = cancelled
+            jr.shed = shed and not cancelled
             jr.ej.job.finish_t = time.monotonic()
             jr.done.set()
             self._inflight -= 1
@@ -283,8 +296,10 @@ class Executor:
         task = jr.ej.job.tasks[idx]
         jr.t_queue = time.monotonic()
         if not self.sched.can_ever_fit(task):
-            # never feasible on any alive device: crash-at-submit instead
-            # of waiting forever in the queue
+            # never feasible on any alive device (or, for a gang, no
+            # feasible device-group shape): crash-at-submit with the
+            # scheduler's explanation instead of waiting forever
+            jr.ej.job.error = self.sched.infeasible_reason(task)
             now = time.monotonic()
             self._record(jr, ExecRecord(
                 jr.ej.job.name, task.name, -1, jr.t_queue, now, now,
@@ -292,55 +307,71 @@ class Executor:
             self._finish(jr, crashed=True)
             return
 
-        def on_admit(t: Task, device: Optional[int], epoch: int,
+        def on_admit(t: Task, placement, epoch: int,
                      jr=jr, idx=idx) -> None:
             # fires under task_end/notify of *another* task (or inline on
             # immediate admission): just hand off to the execution pool.
-            # device None = the fleet shrank to where this task can never
-            # run (mark_dead sweep): crash the job instead of waiting
-            if device is None:
+            # placement None = the fleet shrank to where this task can never
+            # run (mark_dead sweep): crash the job instead of waiting;
+            # DEADLINE_SHED = the scheduler shed the parked waiter past its
+            # deadline: fail the job with SHED status, not CRASHED
+            if placement is DEADLINE_SHED:
+                # no record: the job consumed no device time (matches the
+                # sim backend — a shed handle reports records == [])
+                self._finish(jr, crashed=False, shed=True)
+                return
+            if placement is None:
+                jr.ej.job.error = self.sched.infeasible_reason(t)
                 now = time.monotonic()
                 self._record(jr, ExecRecord(
                     jr.ej.job.name, t.name, -1, jr.t_queue, now, now,
                     crashed=True))
                 self._finish(jr, crashed=True)
                 return
-            self._ready.put(_Ready(jr, idx, device, epoch))
+            self._ready.put(_Ready(jr, idx, placement, epoch))
 
         self.sched.admit_or_enqueue(task, on_admit)
 
     def _execute(self, item: _Ready) -> None:
         jr, task = item.jr, item.jr.ej.job.tasks[item.task_idx]
-        dev_idx = item.device
+        # a gang placement binds the task to its WHOLE reserved device
+        # group; the lead device carries the record/audit identity
+        devs = placement_devices(item.placement)
+        lead = devs[0]
         # evicted while queued for the pool (device died): the re-admitted
         # incarnation owns this task now — drop the stale work item
         if self.sched.admission_epoch(task) != item.epoch:
             return
         if jr.cancel_requested:
             # cancelled between admission and execution: release the
-            # admission (it holds device resources) and end the job
+            # admission (it holds the whole reservation) and end the job
             if self.sched.task_end(task, epoch=item.epoch):
                 self._finish(jr, crashed=False, cancelled=True)
             return
-        # memory-unsafe scheduler may have oversubscribed: OOM crash
-        if self.sched.devices[dev_idx].oom():
+        # memory-unsafe scheduler may have oversubscribed: OOM crash if ANY
+        # member device of the group is past capacity (memory safety must
+        # hold across every device a job touches)
+        if any(self.sched.devices[d].oom() for d in devs):
             if not self.sched.task_end(task, epoch=item.epoch):
                 return  # fenced: evicted + re-admitted elsewhere mid-check
             now = time.monotonic()
             self._record(jr, ExecRecord(
-                jr.ej.job.name, task.name, dev_idx, jr.t_queue,
-                now, now, crashed=True))
+                jr.ej.job.name, task.name, lead, jr.t_queue,
+                now, now, crashed=True, gang_chips=len(devs)))
             self._finish(jr, crashed=True)
             return
         t_start = time.monotonic()
         jr.started = True
         crashed = False
         try:
-            # lazy runtime: replay buffer queues on the chosen device,
-            # then launch the real computation
-            device = self.device_map[dev_idx]
-            lazy.kernel_launch_prepare(jr.ej.buffers, device)
-            jr.ej.runners[item.task_idx](device)
+            # lazy runtime: replay buffer queues on the gang's lead device,
+            # then launch the task's unit group as ONE bound dispatch — a
+            # single-chip runner receives its device, a gang runner receives
+            # the ordered device list of its reservation
+            lazy.kernel_launch_prepare(jr.ej.buffers, self.device_map[lead])
+            bound = (self.device_map[lead] if len(devs) == 1
+                     else [self.device_map[d] for d in devs])
+            jr.ej.runners[item.task_idx](bound)
         except Exception:
             crashed = True
         # epoch fence: if the device died mid-run the task was evicted and
@@ -352,13 +383,13 @@ class Executor:
         if crashed:
             now = time.monotonic()
             self._record(jr, ExecRecord(
-                jr.ej.job.name, task.name, dev_idx, jr.t_queue,
-                t_start, now, crashed=True))
+                jr.ej.job.name, task.name, lead, jr.t_queue,
+                t_start, now, crashed=True, gang_chips=len(devs)))
             self._finish(jr, crashed=True)
             return
         self._record(jr, ExecRecord(
-            jr.ej.job.name, task.name, dev_idx, jr.t_queue, t_start,
-            time.monotonic()))
+            jr.ej.job.name, task.name, lead, jr.t_queue, t_start,
+            time.monotonic(), gang_chips=len(devs)))
         jr.next_task += 1
         if jr.next_task >= len(jr.ej.job.tasks):
             self._finish(jr, crashed=False)
@@ -432,30 +463,34 @@ class PollingExecutor(Executor):
         for task, runner in zip(ej.job.tasks, ej.runners):
             t_queue = time.monotonic()
             # probe -> scheduler (task_begin), retry while infeasible
-            dev_idx = self.sched.task_begin(task)
-            while dev_idx is None:
+            placement = self.sched.task_begin(task)
+            while placement is None:
                 if not self.sched.can_ever_fit(task):
                     raise OOMError(f"{task.name}: never feasible")
                 time.sleep(self.poll)
-                dev_idx = self.sched.task_begin(task)
+                placement = self.sched.task_begin(task)
+            devs = placement_devices(placement)
+            lead = devs[0]
             # memory-unsafe scheduler may have oversubscribed: OOM crash
-            if self.sched.devices[dev_idx].oom():
+            if any(self.sched.devices[d].oom() for d in devs):
                 self.sched.task_end(task)
                 with self._rec_lock:
                     self.records.append(ExecRecord(
-                        ej.job.name, task.name, dev_idx, t_queue,
-                        time.monotonic(), time.monotonic(), crashed=True))
+                        ej.job.name, task.name, lead, t_queue,
+                        time.monotonic(), time.monotonic(), crashed=True,
+                        gang_chips=len(devs)))
                 raise OOMError(
                     f"{task.name}: {task.resources.hbm_bytes} B exceeded "
-                    f"device {dev_idx} capacity")
+                    f"device {lead} capacity")
             t_start = time.monotonic()
             try:
-                device = self.device_map[dev_idx]
-                lazy.kernel_launch_prepare(ej.buffers, device)
-                runner(device)
+                lazy.kernel_launch_prepare(ej.buffers, self.device_map[lead])
+                bound = (self.device_map[lead] if len(devs) == 1
+                         else [self.device_map[d] for d in devs])
+                runner(bound)
             finally:
                 self.sched.task_end(task)
             with self._rec_lock:
                 self.records.append(ExecRecord(
-                    ej.job.name, task.name, dev_idx, t_queue, t_start,
-                    time.monotonic()))
+                    ej.job.name, task.name, lead, t_queue, t_start,
+                    time.monotonic(), gang_chips=len(devs)))

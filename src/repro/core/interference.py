@@ -41,3 +41,20 @@ def slowdown(demands: Sequence[Demand]) -> float:
 def rate(demands: Sequence[Demand]) -> float:
     """Progress rate (fraction of solo speed) for each resident."""
     return 1.0 / slowdown(demands)
+
+
+def ici_slowdown(link_loads: Sequence[float]) -> float:
+    """ICI-contention dilation for a multi-chip task whose collectives share
+    mesh links with co-resident gangs.
+
+    ``link_loads`` are the aggregate bandwidth shares (own + neighbours') on
+    each link the task is charged on (``Topology.task_link_loads``). Like the
+    per-chip model above, this is processor sharing on the bottleneck
+    resource: as long as every shared link has headroom (sum <= 1) the
+    collectives interleave with no slowdown; past the roof on ANY link the
+    whole gang dilates by the worst oversubscription — a synchronized
+    collective advances at its slowest link's pace. A link-free task (no
+    collectives, or chips == 1) is never dilated."""
+    if not link_loads:
+        return 1.0
+    return max(max(link_loads), 1.0)

@@ -1,7 +1,10 @@
-from repro.core.scheduler.base import DeviceState, Scheduler  # noqa: F401
+from repro.core.scheduler.base import (  # noqa: F401
+    DEADLINE_SHED, DeviceState, Scheduler,
+)
 from repro.core.scheduler.baselines import (  # noqa: F401
     CGScheduler, MemOnlyScheduler, SAScheduler,
 )
+from repro.core.scheduler.gang import GangScheduler  # noqa: F401
 from repro.core.scheduler.mgb import (  # noqa: F401
     MGBAlg2Scheduler, MGBAlg3Scheduler,
 )

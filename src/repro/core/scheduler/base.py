@@ -14,7 +14,11 @@ three flavours:
 ``admit_or_enqueue`` is the serving-scale path: a blocked task holds **no**
 thread — it sits in an *admission queue* ordered by (priority desc, deadline
 EDF, arrival FIFO) and every ``task_end`` (or ``revive``) re-drives admission
-in that order, firing the stored callback with the placement. The ordering is
+in that order, firing the stored callback with the placement. A ``task_end``
+drain is *hinted* with the freed capacity so waiters that provably cannot
+use it are skipped without a probe, and (opt-in, ``shed_expired``) waiters
+whose deadline already passed are failed with ``DEADLINE_SHED`` instead of
+admitted late. The ordering is
 enforced here, in the queue itself: callers just stamp ``task.priority`` /
 ``task.deadline_t`` (``Cluster.submit`` does this per job) and park. Within
 one priority class arrival order is stable; tasks with deadlines rank by
@@ -38,6 +42,7 @@ import bisect
 import dataclasses
 import math
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.task import Task
@@ -51,8 +56,21 @@ DEFAULT_HBM = 16 * 1024**3
 SLOTS = 16
 
 # callback(task, placement, epoch) — placement is a device index for the flat
-# schedulers and a SliceRect for the slice scheduler
+# schedulers and a GangReservation for the gang/slice schedulers
 AdmitCallback = Callable[[Task, Any, int], None]
+
+
+class _DeadlineShed:
+    """Sentinel placement: the waiter's deadline passed while it was parked
+    and the scheduler's ``shed_expired`` policy failed it at the drain
+    instead of admitting it late. Distinct from ``None`` (permanently
+    infeasible — give up) so callers can report shed work separately."""
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return "DEADLINE_SHED"
+
+
+DEADLINE_SHED = _DeadlineShed()
 
 
 def slots_needed(task: Task) -> int:
@@ -141,6 +159,19 @@ class WaiterQueueMixin:
         self._admit_cbs: Dict[int, AdmitCallback] = {}
         # uid -> admission epoch; bumped on eviction to fence stale task_ends
         self._epochs: Dict[int, int] = {}
+        # deadline shedding (off by default — a deadline is an EDF ordering
+        # hint unless the operator opts in): when True, a parked waiter whose
+        # ``deadline_t`` has already passed is failed with DEADLINE_SHED at
+        # the next drain instead of being admitted late. ``_clock`` supplies
+        # "now" on the same timeline the deadlines were stamped with — wall
+        # monotonic by default; the simulator repoints it at its virtual
+        # clock.
+        self.shed_expired = False
+        self._clock: Callable[[], float] = time.monotonic
+        # waiters skipped without a probe because the freed-device drain hint
+        # proved the freed capacity cannot satisfy them (observability for
+        # the heterogeneous-queue benchmarks/tests)
+        self.hint_skips = 0
 
     def _enqueue_locked(self, task: Task, callback: AdmitCallback, *,
                         restart: bool = False) -> _Waiter:
@@ -160,9 +191,28 @@ class WaiterQueueMixin:
         raise NotImplementedError
 
     def can_ever_fit(self, task: Task) -> bool:
-        """Would ``task`` be admissible on an *empty* alive device? Callers
-        use this to fail fast instead of waiting forever (a 20 GB task on a
-        16 GB fleet never becomes feasible)."""
+        """Would ``task`` be admissible on an *empty* alive device (or, for a
+        gang scheduler, an empty alive device group)? Callers use this to
+        fail fast instead of waiting forever (a 20 GB task on a 16 GB fleet
+        — or a 5-chip gang on a 4x4 pod with no 5-chip shape — never becomes
+        feasible)."""
+        return True
+
+    def infeasible_reason(self, task: Task) -> str:
+        """Human-readable explanation for a ``can_ever_fit`` failure, stamped
+        on the crashed job so the submitter sees *why* instead of a bare
+        crash flag."""
+        return (f"infeasible placement: task {task.name or task.uid!r} can "
+                f"never be admitted on the current fleet")
+
+    def _hint_may_fit(self, task: Task, freed: Any) -> bool:
+        """Drain-scan hint: could ``task`` POSSIBLY be admitted given that
+        only ``freed`` (a device index, or a cell tuple for topology
+        schedulers) gained capacity since the task parked? Hosts override
+        with an exact-or-conservative check — returning True merely probes,
+        returning False MUST be sound (a parked waiter is infeasible on
+        every unchanged device, so feasibility can only arrive via the freed
+        one)."""
         return True
 
     # -- admission ----------------------------------------------------------
@@ -210,21 +260,44 @@ class WaiterQueueMixin:
     # many, later waiters are probed unconditionally (bounds memo-compare cost)
     _DRAIN_MEMO = 32
 
-    def _drain_locked(self) -> List[Tuple[_Waiter, Any, int]]:
+    def _drain_locked(self, freed: Any = None
+                      ) -> List[Tuple[_Waiter, Any, int]]:
         """Rank-order scan: admit every now-feasible waiter in admission-rank
         order (priority desc, EDF, arrival), keeping still-infeasible ones
         queued. Higher-ranked tasks always get first claim on freed capacity,
         but a too-big head does not block smaller tasks behind it — they are
         probed in turn, which avoids head-of-line deadlock.
 
-        Waiters whose resource vector already failed in THIS pass are skipped
-        without a probe — identical requirements at the same instant see
-        identical feasibility — so a homogeneous fleet (thousands of equal
-        decode tasks) costs O(admitted + 1) per wakeup, not O(queue)."""
+        Three probe-avoidance layers keep a deep heterogeneous queue cheap:
+
+          * **deadline shedding** (when ``shed_expired``): a waiter whose
+            deadline already passed is failed with ``DEADLINE_SHED`` instead
+            of probed — it must never be admitted late;
+          * **freed-capacity hint**: ``task_end`` passes the device (or cell
+            group) it just freed; a waiter that provably cannot use that
+            capacity is skipped without a probe (``_hint_may_fit``) instead
+            of rescanned from the front on every wakeup;
+          * **failed-vector memo**: waiters whose resource vector already
+            failed in THIS pass are skipped — identical requirements at the
+            same instant see identical feasibility — so a homogeneous fleet
+            (thousands of equal decode tasks) costs O(admitted + 1) per
+            wakeup, not O(queue)."""
         fired: List[Tuple[_Waiter, Any, int]] = []
         still: List[_Waiter] = []
         failed: List[Any] = []  # ResourceVectors infeasible this pass
+        now = self._clock() if self.shed_expired else None
         for w in self._waiters:  # already sorted by rank
+            if (now is not None and w.deadline_t is not None
+                    and now > w.deadline_t):
+                # too late to be worth running: shed instead of admitting
+                self._admit_cbs.pop(w.task.uid, None)
+                fired.append((w, DEADLINE_SHED,
+                              self._epochs.get(w.task.uid, 0)))
+                continue
+            if freed is not None and not self._hint_may_fit(w.task, freed):
+                self.hint_skips += 1
+                still.append(w)
+                continue
             res = w.task.resources
             if any(f == res for f in failed):
                 still.append(w)
@@ -345,9 +418,22 @@ class Scheduler(WaiterQueueMixin):
         self.begin_attempts = 0
         self._init_waiters()
 
-    # -- policy hook -------------------------------------------------------
+    # -- policy hooks ------------------------------------------------------
     def select_device(self, task: Task) -> Optional[DeviceState]:
         raise NotImplementedError
+
+    def device_feasible(self, task: Task, dev: DeviceState) -> bool:
+        """Would ``select_device`` consider ``dev`` for ``task`` right now?
+        Each policy states its per-device admission predicate here;
+        ``select_device`` ranges over it and the drain hint consults it to
+        skip waiters a freed device cannot satisfy."""
+        return dev.alive
+
+    def _hint_may_fit(self, task: Task, freed: int) -> bool:
+        # sound: a parked waiter was infeasible on EVERY device, and only
+        # the freed device's state improved since — so it is admissible now
+        # iff the freed device itself would take it
+        return self.device_feasible(task, self.devices[freed])
 
     def _admit_locked(self, task: Task) -> Optional[int]:
         self.begin_attempts += 1
@@ -363,6 +449,14 @@ class Scheduler(WaiterQueueMixin):
         return any(d.alive and task.resources.hbm_bytes <= d.total_hbm
                    for d in self.devices)
 
+    def infeasible_reason(self, task: Task) -> str:
+        alive = [d for d in self.devices if d.alive]
+        biggest = max((d.total_hbm for d in alive), default=0)
+        return (f"infeasible placement: task {task.name or task.uid!r} needs "
+                f"{task.resources.hbm_bytes / 1e9:.2f} GB HBM but the "
+                f"largest of {len(alive)} alive device(s) holds "
+                f"{biggest / 1e9:.2f} GB")
+
     # -- paper API -----------------------------------------------------------
     def task_begin(self, task: Task) -> Optional[int]:
         """Probe entry point: returns the device index or None (caller queues)."""
@@ -370,16 +464,19 @@ class Scheduler(WaiterQueueMixin):
             return self._admit_locked(task)
 
     def task_end(self, task: Task, *, epoch: Optional[int] = None) -> bool:
-        """Free the task's resources and re-drive the waiter queue. With
-        ``epoch``, a completion from an evicted (superseded) run is fenced:
-        nothing is released and False is returned."""
+        """Free the task's resources and re-drive the waiter queue, passing
+        the freed device as the drain hint so heterogeneous queues skip
+        waiters that device can't satisfy. With ``epoch``, a completion from
+        an evicted (superseded) run is fenced: nothing is released and False
+        is returned."""
         with self._lock:
             if self._stale_locked(task, epoch):
                 return False
-            if task.device is not None:
-                self.devices[task.device].release(task)
+            freed = task.device
+            if freed is not None:
+                self.devices[freed].release(task)
             self._admit_cbs.pop(task.uid, None)
-            fired = self._drain_locked()
+            fired = self._drain_locked(freed=freed)
         self._fire(fired)
         return True
 
@@ -405,7 +502,8 @@ class Scheduler(WaiterQueueMixin):
     def revive(self, device_index: int) -> None:
         with self._lock:
             self.devices[device_index].alive = True
-            fired = self._drain_locked()  # waiters may land on the revived dev
+            # only the revived device changed: hint the drain at it
+            fired = self._drain_locked(freed=device_index)
         self._fire(fired)
 
     def alive_devices(self) -> List[DeviceState]:

@@ -24,9 +24,12 @@ class SAScheduler(Scheduler):
 
     name = "SA"
 
+    def device_feasible(self, task: Task, dev: DeviceState) -> bool:
+        return dev.alive and not dev.residents
+
     def select_device(self, task: Task) -> Optional[DeviceState]:
         for dev in self.devices:
-            if dev.alive and not dev.residents:
+            if self.device_feasible(task, dev):
                 return dev
         return None
 
@@ -51,11 +54,15 @@ class CGScheduler(Scheduler):
         # memory-oblivious: any alive device "fits" (and may then OOM)
         return any(d.alive for d in self.devices)
 
+    def device_feasible(self, task: Task, dev: DeviceState) -> bool:
+        # free HBM deliberately NOT consulted — the whole point of CG
+        return dev.alive and len(dev.residents) < self.ratio
+
     def select_device(self, task: Task) -> Optional[DeviceState]:
         n = len(self.devices)
         for k in range(n):
             dev = self.devices[(self._rr + k) % n]
-            if dev.alive and len(dev.residents) < self.ratio:
+            if self.device_feasible(task, dev):
                 self._rr = (self._rr + k + 1) % n
                 return dev
         return None
@@ -66,8 +73,11 @@ class MemOnlyScheduler(Scheduler):
 
     name = "schedGPU"
 
+    def device_feasible(self, task: Task, dev: DeviceState) -> bool:
+        return dev.alive and task.resources.hbm_bytes <= dev.free_hbm
+
     def select_device(self, task: Task) -> Optional[DeviceState]:
         for dev in self.devices:  # first fit — never balances
-            if dev.alive and task.resources.hbm_bytes <= dev.free_hbm:
+            if self.device_feasible(task, dev):
                 return dev
         return None

@@ -1,0 +1,284 @@
+"""Gang placement: topology-aware atomic reservation of device groups.
+
+The paper's schedulers place one task on one device. The flagship multi-chip
+workloads (sharded train steps, pipeline stages) declare ``chips > 1`` and
+need a *gang*: a contiguous, ICI-connected device group reserved **all at
+once**. ``GangScheduler`` is that layer, built on the pod/mesh model in
+``repro.core.topology`` and the waiter queue in ``scheduler.base``:
+
+  * a gang either gets ALL its chips or parks as ONE waiter — partial
+    reservations never exist, so two half-admitted gangs can never deadlock
+    against each other holding pieces the other needs;
+  * per member chip, memory is checked HARD (the MGB guarantee extends to
+    every device a job touches — Reaño et al.'s intra-node memory-safety
+    condition, at pod scale) and compute follows the paper's policy split:
+    ``policy="alg2"`` requires free slots on every member (exact),
+    ``policy="alg3"`` is optimistic — min aggregate demand over candidate
+    groups (fewest in-use warps, summed over the group);
+  * ICI/DCN **link headroom** is part of admission: a gang's collectives put
+    ``collective_bytes / est_seconds / link_bw`` of steady load on every
+    link internal to its group (ring model). Under alg2 a group whose links
+    would oversubscribe is rejected (links hard); under alg3 link pressure
+    is the placement tie-break and oversubscription is tolerated — the
+    simulator then dilates the sharing gangs (``interference.ici_slowdown``),
+    mirroring how alg3 treats compute;
+  * ``task_end`` / ``cancel`` / ``mark_dead`` release the WHOLE reservation
+    (chips + links) under the existing epoch fence, and ``task_end`` hints
+    the waiter-queue drain with the freed cells so heterogeneous queues skip
+    waiters those cells cannot satisfy;
+  * a gang whose shape can never exist (more chips than the fleet, or no
+    feasible slice factorization, e.g. 5 chips on a 4x4 pod) fails fast via
+    ``can_ever_fit`` + ``infeasible_reason`` instead of parking forever.
+
+Single-chip tasks ride the same path as 1x1 groups, so one scheduler serves
+a mixed single-chip / multi-chip open-arrival stream.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.core import interference
+from repro.core.scheduler.base import (
+    DEFAULT_HBM, SLOTS, DeviceState, WaiterQueueMixin, slots_needed,
+)
+from repro.core.task import Task
+from repro.core.topology import (
+    DCN_BW, ICI_BW, Cell, GangReservation, Topology,
+)
+
+CellOrIndex = Union[Cell, int]
+
+
+class GangScheduler(WaiterQueueMixin):
+    """Atomic gang reservation over a ``Topology``, through the shared
+    priority/deadline waiter queue. The admission callback receives a
+    ``GangReservation`` (``device_indices`` has the whole group, ``lead`` is
+    the audit-log index); single-chip tasks get a 1-cell group."""
+
+    def __init__(self, pods: int = 1, rows: int = 4, cols: int = 4, *,
+                 policy: str = "alg3", hbm_per_chip: int = DEFAULT_HBM,
+                 ici_bw: float = ICI_BW, dcn_bw: float = DCN_BW,
+                 topology: Optional[Topology] = None):
+        if policy not in ("alg2", "alg3"):
+            raise ValueError(f"unknown gang policy {policy!r} "
+                             "(expected 'alg2' or 'alg3')")
+        if topology is None:
+            topology = Topology(pods, rows, cols, hbm_per_chip,
+                                ici_bw=ici_bw, dcn_bw=dcn_bw)
+        self.topo = topology
+        self.pods, self.rows, self.cols = \
+            topology.pods, topology.rows, topology.cols
+        self.policy = policy
+        self.name = f"MGB-gang-{policy}"
+        # legacy slice-scheduler surface: cell -> DeviceState (the same dict
+        # the topology owns, not a copy)
+        self.chips: Dict[Cell, DeviceState] = topology.cells
+        # flat-index device-table view, built once (the cell set is fixed
+        # after construction); executor/simulator hot paths index this per
+        # gang member, so it must not be rebuilt per access
+        self._device_list: List[DeviceState] = topology.device_list()
+        self.bound: Dict[int, GangReservation] = {}   # task uid -> group
+        self._lock = threading.Lock()
+        self.begin_attempts = 0
+        self.placements: List[tuple] = []   # (task uid, lead device) audit
+        self._init_waiters()
+
+    # -- device-table view (what the executor/simulator index) ---------------
+    @property
+    def devices(self) -> List[DeviceState]:
+        return self._device_list
+
+    def _as_cell(self, cell: CellOrIndex) -> Cell:
+        return self.topo.cell_of(cell) if isinstance(cell, int) else cell
+
+    # -- feasibility ---------------------------------------------------------
+    def _member_ok(self, cell: Cell, per_chip: int, need: int) -> bool:
+        """Is this cell admissible as a gang member RIGHT NOW? Memory hard
+        always; compute slots hard only under alg2."""
+        d = self.topo.cells[cell]
+        if not d.alive or per_chip > d.free_hbm:
+            return False
+        if self.policy == "alg2" and d.used_slots + need > SLOTS:
+            return False
+        return True
+
+    def _member_ever_ok(self, cell: Cell, per_chip: int, need: int) -> bool:
+        """Same predicate against an EMPTY cell (the can_ever_fit check)."""
+        d = self.topo.cells[cell]
+        if not d.alive or per_chip > d.total_hbm:
+            return False
+        if self.policy == "alg2" and need > SLOTS:
+            return False
+        return True
+
+    def _find_group(self, task: Task) -> Optional[GangReservation]:
+        r = task.resources
+        k = max(r.chips, 1)
+        per_chip = r.hbm_bytes // k
+        need = slots_needed(task)
+        best: Optional[GangReservation] = None
+        best_key: Tuple[float, float] = (float("inf"), float("inf"))
+        for group in self.topo.candidate_groups(k):
+            if not all(self._member_ok(c, per_chip, need)
+                       for c in group.cells()):
+                continue
+            if self.policy == "alg2" \
+                    and not self.topo.link_headroom_ok(group, r):
+                continue  # links hard: collectives must not oversubscribe
+            # Alg. 3 tie-break, summed over the group: fewest in-use warps
+            # first, then least-contended links (soft-link pressure)
+            key = (sum(self.topo.cells[c].in_use_demand
+                       for c in group.cells()),
+                   self.topo.max_link_load(group))
+            if key < best_key:
+                best, best_key = group, key
+            if key == (0.0, 0.0):
+                return group  # idle group on idle links: cannot do better
+        return best
+
+    def can_ever_fit(self, task: Task) -> bool:
+        r = task.resources
+        k = max(r.chips, 1)
+        per_chip = r.hbm_bytes // k
+        need = slots_needed(task)
+        return any(all(self._member_ever_ok(c, per_chip, need)
+                       for c in group.cells())
+                   for group in self.topo.candidate_groups(k))
+
+    def infeasible_reason(self, task: Task) -> str:
+        r = task.resources
+        k = max(r.chips, 1)
+        topo = (f"{self.topo.pods} pod(s) x {self.topo.rows}x"
+                f"{self.topo.cols}")
+        if not self.topo.has_feasible_shape(k):
+            return (f"infeasible placement: gang {task.name or task.uid!r} "
+                    f"needs {k} chips but no {k}-chip contiguous group "
+                    f"shape exists on the {topo} topology "
+                    f"({self.topo.total_chips} chips total)")
+        alive = self.topo.alive_count()
+        if k > alive:
+            return (f"infeasible placement: gang {task.name or task.uid!r} "
+                    f"needs {k} chips but only {alive} of "
+                    f"{self.topo.total_chips} are alive on the {topo} "
+                    f"topology")
+        return (f"infeasible placement: gang {task.name or task.uid!r} "
+                f"needs {r.hbm_bytes / max(k, 1) / 1e9:.2f} GB HBM per chip "
+                f"across {k} chips, beyond every feasible group on the "
+                f"{topo} topology ({alive} alive chips)")
+
+    # -- admission / release --------------------------------------------------
+    def _admit_locked(self, task: Task) -> Optional[GangReservation]:
+        self.begin_attempts += 1
+        r = task.resources
+        k = max(r.chips, 1)
+        group = self._find_group(task)
+        if group is None:
+            return None
+        per_chip = r.hbm_bytes // k
+        need = slots_needed(task)
+        for cell in group.cells():
+            d = self.topo.cells[cell]
+            # not DeviceState.admit(): a gang charges each member its
+            # per-chip share, not the whole-gang footprint
+            d.used_hbm += per_chip
+            d.used_slots += need
+            d.residents[task.uid] = task
+        self.topo.reserve_links(task.uid, group, r)
+        self.bound[task.uid] = group
+        task.device = group.lead
+        self.placements.append((task.uid, group.lead))
+        return group
+
+    def _release_locked(self, task: Task) -> Optional[GangReservation]:
+        group = self.bound.pop(task.uid, None)
+        if group is None:
+            return None
+        r = task.resources
+        per_chip = r.hbm_bytes // max(r.chips, 1)
+        need = slots_needed(task)
+        for cell in group.cells():
+            d = self.topo.cells[cell]
+            if task.uid in d.residents:
+                del d.residents[task.uid]
+                d.used_hbm -= per_chip
+                d.used_slots -= need
+        self.topo.release_links(task.uid)
+        return group
+
+    # -- paper API at gang granularity ----------------------------------------
+    def task_begin(self, task: Task) -> Optional[GangReservation]:
+        with self._lock:
+            return self._admit_locked(task)
+
+    def task_end(self, task: Task, *, epoch: Optional[int] = None) -> bool:
+        """Release the WHOLE reservation (chips + links) and re-drive the
+        waiter queue, hinting the drain with the freed cells so waiters no
+        freed cell can satisfy are skipped without a probe."""
+        with self._lock:
+            if self._stale_locked(task, epoch):
+                return False
+            group = self._release_locked(task)
+            self._admit_cbs.pop(task.uid, None)
+            freed = tuple(group.cells()) if group is not None else None
+            fired = self._drain_locked(freed=freed)
+        self._fire(fired)
+        return True
+
+    def _hint_may_fit(self, task: Task, freed: Tuple[Cell, ...]) -> bool:
+        # sound: a newly feasible group must contain at least one freed cell
+        # (all other cells — and all links, whose endpoints are freed cells —
+        # are unchanged since the waiter parked), and that cell must itself
+        # pass the member check
+        r = task.resources
+        per_chip = r.hbm_bytes // max(r.chips, 1)
+        need = slots_needed(task)
+        return any(self._member_ok(c, per_chip, need) for c in freed)
+
+    # -- fault tolerance ------------------------------------------------------
+    def mark_dead(self, cell: CellOrIndex) -> List[Task]:
+        """Fail one chip: every gang overlapping it is evicted WHOLE (its
+        entire reservation — all member chips and link charges — is
+        released under the epoch fence, then it re-enters the waiter queue
+        at the front of its priority class)."""
+        cell = self._as_cell(cell)
+        with self._lock:
+            self.topo.cells[cell].alive = False
+            evicted: List[Task] = []
+            for uid, group in list(self.bound.items()):
+                if cell not in set(group.cells()):
+                    continue
+                task = None
+                for c2 in group.cells():
+                    task = self.topo.cells[c2].residents.get(uid)
+                    if task is not None:
+                        break
+                self._release_locked(task)
+                task.device = None
+                evicted.append(task)
+            self._requeue_evicted_locked(evicted)
+            fired = self._drain_locked()  # waiters may fit on survivors
+            fired += self._fail_impossible_locked()
+        self._fire(fired)
+        return evicted
+
+    def revive(self, cell: CellOrIndex) -> None:
+        cell = self._as_cell(cell)
+        with self._lock:
+            self.topo.cells[cell].alive = True
+            fired = self._drain_locked(freed=(cell,))
+        self._fire(fired)
+
+    # -- runtime contention (the simulator's dilation inputs) -----------------
+    def link_pressure(self, task: Task) -> float:
+        """ICI-contention dilation factor for a RESIDENT task: processor
+        sharing on the busiest link its collectives traverse (1.0 when its
+        links have headroom or it runs no collectives)."""
+        with self._lock:
+            loads = self.topo.task_link_loads(task.uid)
+        return interference.ici_slowdown(loads)
+
+    # -- introspection --------------------------------------------------------
+    def utilization(self) -> float:
+        busy = sum(1 for d in self.topo.cells.values() if d.residents)
+        return busy / len(self.topo.cells)

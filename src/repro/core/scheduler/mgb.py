@@ -27,17 +27,18 @@ class MGBAlg2Scheduler(Scheduler):
 
     name = "MGB-Alg2"
 
+    def device_feasible(self, task: Task, dev: DeviceState) -> bool:
+        if not dev.alive:
+            return False
+        if task.resources.hbm_bytes > dev.free_hbm:
+            return False  # memory: hard
+        # dev.used_slots is maintained on admit/release: O(1) per device
+        return dev.used_slots + slots_needed(task) <= SLOTS  # compute: hard
+
     def select_device(self, task: Task) -> Optional[DeviceState]:
-        need = slots_needed(task)
         for dev in self.devices:
-            if not dev.alive:
-                continue
-            if task.resources.hbm_bytes > dev.free_hbm:
-                continue  # memory: hard
-            # dev.used_slots is maintained on admit/release: O(1) per device
-            if dev.used_slots + need > SLOTS:
-                continue  # compute: hard (paper: TBs failed to place)
-            return dev
+            if self.device_feasible(task, dev):
+                return dev
         return None
 
 
@@ -52,14 +53,18 @@ class MGBAlg3Scheduler(Scheduler):
         # size for backpressure; the executor passes 0.
         self.max_residents = max_residents
 
+    def device_feasible(self, task: Task, dev: DeviceState) -> bool:
+        if not dev.alive:
+            return False
+        if task.resources.hbm_bytes > dev.free_hbm:
+            return False  # memory: hard — never an OOM (paper's guarantee)
+        return not (self.max_residents
+                    and len(dev.residents) >= self.max_residents)
+
     def select_device(self, task: Task) -> Optional[DeviceState]:
         best: Optional[DeviceState] = None
         for dev in self.devices:
-            if not dev.alive:
-                continue
-            if task.resources.hbm_bytes > dev.free_hbm:
-                continue  # memory: hard — never an OOM (paper's guarantee)
-            if self.max_residents and len(dev.residents) >= self.max_residents:
+            if not self.device_feasible(task, dev):
                 continue
             if best is None or dev.in_use_demand < best.in_use_demand:
                 best = dev

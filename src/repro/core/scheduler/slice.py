@@ -1,195 +1,30 @@
-"""Beyond-paper: slice-level scheduling on a pod mesh.
+"""Beyond-paper: slice-level scheduling on a pod mesh — now a thin client of
+the gang placement subsystem.
 
-The paper packs single-GPU tasks onto 2-4 devices in one node. At pod scale
-the schedulable resource is a *mesh slice*: a task declares ``chips`` (1, 8,
-16, 256, ...) and the scheduler places it on a contiguous, ICI-connected block
-of a (rows x cols) chip grid — contiguity keeps the task's collectives on
-intra-slice links. Memory stays a hard per-chip constraint (the MGB
-guarantee); compute follows Alg. 3's min-aggregate-demand tie-break across
-candidate slices.
-
-This is the 1000+-node story: a 2-pod 512-chip system schedules a mix of
-405B whole-slice training tasks and tiny SSM decode tasks without fragmenting
-the torus.
+Historically this module owned its own grid math (rect enumeration, per-chip
+fit checks). That all lives in ``repro.core.topology`` now, and the atomic
+reservation + waiter-queue integration lives in
+``repro.core.scheduler.gang.GangScheduler``; ``SliceScheduler`` survives as
+the memory-hard / compute-soft (Alg. 3) configuration of that subsystem at
+pod-fleet defaults — the 1000+-node story: a 2-pod 512-chip system schedules
+a mix of 405B whole-slice training tasks and tiny SSM decode tasks without
+fragmenting the torus, with ICI/DCN link accounting it never had before.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-import threading
-from typing import Dict, List, Optional, Tuple
-
-from repro.core.scheduler.base import (
-    DEFAULT_HBM, DeviceState, WaiterQueueMixin, slots_needed,
-)
-from repro.core.task import Task
+from repro.core.scheduler.base import DEFAULT_HBM
+from repro.core.scheduler.gang import GangScheduler
+from repro.core.topology import SliceRect  # noqa: F401  (legacy re-export)
 
 
-@dataclasses.dataclass(frozen=True)
-class SliceRect:
-    """A contiguous rectangle of chips on one pod's (rows x cols) grid."""
-    pod: int
-    r0: int
-    c0: int
-    rows: int
-    cols: int
-
-    @property
-    def chips(self) -> int:
-        return self.rows * self.cols
-
-    def cells(self):
-        for r in range(self.r0, self.r0 + self.rows):
-            for c in range(self.c0, self.c0 + self.cols):
-                yield (self.pod, r, c)
-
-
-def _slice_shapes(chips: int, rows: int, cols: int) -> List[Tuple[int, int]]:
-    """Near-square factorizations of ``chips`` that fit the grid (preferred
-    first: square slices minimize ring hop count for both mesh axes)."""
-    shapes = []
-    for r in range(1, chips + 1):
-        if chips % r:
-            continue
-        c = chips // r
-        if r <= rows and c <= cols:
-            shapes.append((r, c))
-    shapes.sort(key=lambda rc: abs(rc[0] - rc[1]))
-    return shapes
-
-
-class SliceScheduler(WaiterQueueMixin):
-    """Places k-chip tasks on contiguous slices of a multi-pod chip grid.
-
-    Inherits the waiter/wakeup machinery from ``WaiterQueueMixin``, so the
-    event-driven executor drives slice tasks through the exact same
-    admit_or_enqueue / task_end-notify protocol as the flat schedulers — the
-    admission callback just receives a ``SliceRect`` instead of an index.
-    """
-
-    name = "MGB-slice"
+class SliceScheduler(GangScheduler):
+    """Places k-chip tasks on contiguous slices of a multi-pod chip grid:
+    ``GangScheduler`` with the Alg. 3 policy (memory hard per member chip,
+    compute + links soft with min-demand / least-link-pressure tie-breaks)
+    at pod-scale defaults."""
 
     def __init__(self, pods: int = 2, rows: int = 16, cols: int = 16,
                  hbm_per_chip: int = DEFAULT_HBM):
-        self.pods, self.rows, self.cols = pods, rows, cols
-        self.chips: Dict[Tuple[int, int, int], DeviceState] = {
-            (p, r, c): DeviceState(index=(p * rows + r) * cols + c,
-                                   total_hbm=hbm_per_chip)
-            for p in range(pods) for r in range(rows) for c in range(cols)}
-        self.bound: Dict[int, SliceRect] = {}   # task uid -> slice
-        self._lock = threading.Lock()
-        self.begin_attempts = 0
-        self._init_waiters()
-
-    # -- feasibility --------------------------------------------------------
-    def _fits(self, rect: SliceRect, per_chip_bytes: int) -> bool:
-        for cell in rect.cells():
-            d = self.chips[cell]
-            if not d.alive or per_chip_bytes > d.free_hbm:
-                return False
-        return True
-
-    def _slice_demand(self, rect: SliceRect) -> float:
-        return sum(self.chips[c].in_use_demand for c in rect.cells())
-
-    def _find_slice(self, n_chips: int, per_chip_bytes: int
-                    ) -> Optional[SliceRect]:
-        best: Optional[SliceRect] = None
-        best_demand = math.inf
-        for pod in range(self.pods):
-            for (sr, sc) in _slice_shapes(n_chips, self.rows, self.cols):
-                for r0 in range(0, self.rows - sr + 1, sr):
-                    for c0 in range(0, self.cols - sc + 1, sc):
-                        rect = SliceRect(pod, r0, c0, sr, sc)
-                        if not self._fits(rect, per_chip_bytes):
-                            continue
-                        d = self._slice_demand(rect)
-                        if d < best_demand:
-                            best, best_demand = rect, d
-                        if d == 0.0:
-                            return rect  # idle slice: cannot do better
-        return best
-
-    # -- paper API at slice granularity --------------------------------------
-    def _admit_locked(self, task: Task) -> Optional[SliceRect]:
-        self.begin_attempts += 1
-        r = task.resources
-        per_chip = r.hbm_bytes // max(r.chips, 1)
-        rect = self._find_slice(r.chips, per_chip)
-        if rect is None:
-            return None
-        for cell in rect.cells():
-            dev = self.chips[cell]
-            # not DeviceState.admit(): a slice task charges each chip its
-            # per-chip share, not the whole-task footprint
-            dev.used_hbm += per_chip
-            dev.used_slots += slots_needed(task)
-            dev.residents[task.uid] = task
-        self.bound[task.uid] = rect
-        task.device = rect.pod * self.rows * self.cols \
-            + rect.r0 * self.cols + rect.c0
-        return rect
-
-    def can_ever_fit(self, task: Task) -> bool:
-        r = task.resources
-        per_chip = r.hbm_bytes // max(r.chips, 1)
-        alive = sum(1 for d in self.chips.values()
-                    if d.alive and per_chip <= d.total_hbm)
-        return alive >= r.chips
-
-    def task_begin(self, task: Task) -> Optional[SliceRect]:
-        with self._lock:
-            return self._admit_locked(task)
-
-    def _release_locked(self, task: Task) -> None:
-        rect = self.bound.pop(task.uid, None)
-        if rect is None:
-            return
-        per_chip = task.resources.hbm_bytes // max(task.resources.chips, 1)
-        for cell in rect.cells():
-            dev = self.chips[cell]
-            if task.uid in dev.residents:
-                del dev.residents[task.uid]
-                dev.used_hbm -= per_chip
-                dev.used_slots -= slots_needed(task)
-
-    def task_end(self, task: Task, *, epoch: Optional[int] = None) -> bool:
-        with self._lock:
-            if self._stale_locked(task, epoch):
-                return False
-            self._release_locked(task)
-            self._admit_cbs.pop(task.uid, None)
-            fired = self._drain_locked()
-        self._fire(fired)
-        return True
-
-    def mark_dead(self, cell: Tuple[int, int, int]) -> List[Task]:
-        """Fail one chip: every slice-task overlapping it is evicted whole."""
-        with self._lock:
-            self.chips[cell].alive = False
-            evicted = []
-            for uid, rect in list(self.bound.items()):
-                if cell in set(rect.cells()):
-                    task = None
-                    for c2 in rect.cells():
-                        task = self.chips[c2].residents.get(uid)
-                        if task is not None:
-                            break
-                    self._release_locked(task)
-                    task.device = None
-                    evicted.append(task)
-            self._requeue_evicted_locked(evicted)
-            fired = self._drain_locked()  # waiters may fit on survivors
-            fired += self._fail_impossible_locked()
-        self._fire(fired)
-        return evicted
-
-    def revive(self, cell: Tuple[int, int, int]) -> None:
-        with self._lock:
-            self.chips[cell].alive = True
-            fired = self._drain_locked()
-        self._fire(fired)
-
-    def utilization(self) -> float:
-        busy = sum(1 for d in self.chips.values() if d.residents)
-        return busy / len(self.chips)
+        super().__init__(pods, rows, cols, policy="alg3",
+                         hbm_per_chip=hbm_per_chip)
+        self.name = "MGB-slice"

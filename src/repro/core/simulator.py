@@ -7,7 +7,11 @@ event (``step`` / ``drain``), and a pool of workers each dequeue a job, run
 its GPU tasks under the scheduler, and pull the next. ``run(jobs)`` is the
 closed-batch compatibility wrapper (everything arrives at t=0). Task progress
 follows the processor-sharing interference model (repro.core.interference):
-residents of an oversubscribed chip dilate by the total core demand.
+residents of an oversubscribed chip dilate by the total core demand. A gang
+task (multi-chip reservation) occupies every member chip, advances at its
+slowest member's rate, and is further dilated by ICI link contention when
+co-resident gangs oversubscribe a shared link (``interference.ici_slowdown``
+over the scheduler's link ledger).
 
 Admission goes through the scheduler's OWN waiter queue — the same
 priority/deadline-ordered wakeup path the live executor uses — so simulated
@@ -28,8 +32,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import interference
 from repro.core.executor import ExecRecord
-from repro.core.scheduler.base import Scheduler
+from repro.core.scheduler.base import DEADLINE_SHED, Scheduler
 from repro.core.task import Job, Task
+from repro.core.topology import placement_devices
 
 _EPS = 1e-12
 
@@ -46,6 +51,7 @@ class SimResult:
     device_busy: List[float]       # per-device busy seconds
     utilization: float             # mean busy fraction over makespan
     cancelled: int = 0             # jobs ended by JobHandle.cancel()
+    shed: int = 0                  # parked jobs failed past their deadline
 
     @property
     def mean_turnaround(self) -> float:
@@ -63,12 +69,19 @@ class _Running:
     task: Task
     job: "_JobState"
     remaining: float       # seconds of solo work left
-    device: int
+    # every device of the reservation (1 entry for single-chip tasks; a
+    # gang's synchronized shards advance at the SLOWEST member's rate and
+    # occupy every member chip for busy accounting)
+    devices: Tuple[int, ...]
     # integral of per-kernel overhead d(work): MPS interleaves at kernel
     # granularity, so an individual kernel's execution dilates only by the
     # co-residency overhead (cache/queue, interference.ETA_PER_RESIDENT);
     # the sharing factor shows up as wait time between kernels instead.
     kwork: float = 0.0
+
+    @property
+    def lead(self) -> int:
+        return self.devices[0]
 
 
 @dataclasses.dataclass
@@ -80,6 +93,7 @@ class _JobState:
     done: bool = False
     cancelled: bool = False
     cancel_requested: bool = False
+    shed: bool = False     # parked past its deadline and shed at a drain
     records: List[ExecRecord] = dataclasses.field(default_factory=list)
 
 
@@ -103,6 +117,9 @@ class Simulator:
         """Fresh virtual clock and empty state (``run`` calls this; open-
         arrival users call it to reuse the object across traces)."""
         self.now = 0.0
+        # deadline shedding (if the scheduler opts in) must judge "now" on
+        # the VIRTUAL clock the deadlines were stamped with
+        self.sched._clock = lambda: self.now
         self.records: List[ExecRecord] = []
         self._queue: List[_JobState] = []   # jobs waiting for a sim worker
         # admissions fired by the scheduler's waiter queue (the SAME wakeup
@@ -120,6 +137,7 @@ class Simulator:
         self._completed = 0
         self._crashed = 0
         self._cancelled = 0
+        self._shed = 0
         self._crashing: List[Tuple[float, _JobState]] = []  # (free time, job)
         self._turnaround: Dict[str, float] = {}
         self._failure_pending: Optional[Tuple[float, int]] = None
@@ -139,6 +157,8 @@ class Simulator:
         for t in job.tasks:
             t.priority = job.priority
             t.deadline_t = job.deadline_t
+            if t.gang_id is None:
+                t.gang_id = job.gang_id
         job.arrival_t = self.now
         js = _JobState(job)
         if not job.tasks:
@@ -179,25 +199,35 @@ class Simulator:
         # running (or admitted): the completion path honours the flag
         return True
 
-    def step(self) -> bool:
+    def step(self, limit: Optional[float] = None) -> bool:
         """Advance the virtual clock to the next event (a task completion, a
         crash reap, an injected failure, or a poll tick when everything is
-        parked). Returns False when nothing is pending."""
+        parked). With ``limit``, never advance past that virtual time —
+        running work makes partial progress instead (the open-arrival
+        driver's tool: submissions between events land at exact times).
+        Returns False when nothing is pending."""
         if not self.pending():
             return False
         if not self._running and self._crashing:
-            self.now = min(t for t, _ in self._crashing)
+            reap_t = min(t for t, _ in self._crashing)
+            if limit is not None and reap_t > limit:
+                self.now = max(self.now, limit)
+                return True
+            self.now = reap_t
             self._reap_crashed()
             self._try_start()
             return True
         if not self._running:
             # nothing progresses: either a failure is pending or every
             # submitted task is parked in the admission queue
+            prev = self.now
             if self._failure_pending is not None \
                     and self._failure_pending[0] <= self.now + self.poll:
                 self.now = max(self.now, self._failure_pending[0])
             else:
                 self.now += self.poll
+            if limit is not None and limit >= prev:
+                self.now = min(self.now, limit)
             self._maybe_fail()
             self._try_start()
             if not self._running and self._failure_pending is None \
@@ -219,8 +249,8 @@ class Simulator:
         # next event: earliest task completion at current rates (a
         # completion's task_end IS the wakeup that re-drives admission —
         # no poll tick needed for waiters), or the injected failure
-        dt = min((r.remaining / rt[r.device][0]
-                  for r in self._running.values()),
+        dt = min((r.remaining / rt[uid][0]
+                  for uid, r in self._running.items()),
                  default=float("inf"))
         if self._crashing:
             dt = min(dt, max(min(t for t, _ in self._crashing) - self.now,
@@ -228,13 +258,16 @@ class Simulator:
         if self._failure_pending is not None:
             dt = min(dt, max(self._failure_pending[0] - self.now, 0.0))
         dt = max(dt, _EPS)
+        if limit is not None:
+            # bounded step: stop AT the limit, applying partial progress
+            dt = min(dt, max(limit - self.now, _EPS))
         # advance; accumulate per-kernel overhead against work done
-        for r in self._running.values():
-            rate_d, overhead_d = rt[r.device]
-            work = dt * rate_d
+        for uid, r in self._running.items():
+            rate_t, overhead_t = rt[uid]
+            work = dt * rate_t
             r.remaining -= work
-            r.kwork += work * overhead_d
-        for d in {r.device for r in self._running.values()}:
+            r.kwork += work * overhead_t
+        for d in {d for r in self._running.values() for d in r.devices}:
             self._busy[d] += dt
         self.now += dt
         self._reap_crashed()
@@ -247,6 +280,16 @@ class Simulator:
         """True while any submitted work is unresolved."""
         return bool(self._running or self._queue or self._crashing
                     or self._blocked or self._admitted_buf)
+
+    def run_until(self, t: float) -> None:
+        """Advance the virtual clock to EXACTLY ``t``, processing every event
+        on the way (events never overshoot it). The open-arrival driver:
+        ``submit(a); run_until(t_b); submit(b); ...`` lands each submission
+        at its intended arrival time, progress interleaving in between."""
+        while self.now < t - 1e-9:
+            if not self.step(limit=t):
+                self.now = t  # idle: nothing to process, jump the clock
+                return
 
     def drain(self, time_limit: float = 1e7) -> "SimResult":
         """Barrier: advance the clock until every submitted job resolved
@@ -275,7 +318,7 @@ class Simulator:
             slowdowns=dict(self._slowdowns),
             dilations=dict(self._dilations),
             device_busy=list(self._busy), utilization=util,
-            cancelled=self._cancelled)
+            cancelled=self._cancelled, shed=self._shed)
 
     # -- compatibility wrapper ------------------------------------------------
     def run(self, jobs: Sequence[Job], *, time_limit: float = 1e7,
@@ -291,15 +334,31 @@ class Simulator:
 
     # -- engine internals -----------------------------------------------------
     def _rates(self) -> Dict[int, Tuple[float, float]]:
-        """device -> (progress rate, per-kernel overhead factor)."""
+        """task uid -> (progress rate, per-kernel overhead factor).
+
+        A single-chip task progresses at its device's processor-sharing rate.
+        A gang's shards are synchronized, so the gang advances at its
+        SLOWEST member chip's rate, further dilated by ICI contention when a
+        soft-link policy let co-resident gangs oversubscribe a shared link
+        (``interference.ici_slowdown`` via the scheduler's link ledger)."""
         by_dev: Dict[int, List[tuple]] = {}
         for r in self._running.values():
             res = r.task.resources
-            by_dev.setdefault(r.device, []).append(
-                (res.core_demand, res.bw_demand))
-        return {d: (interference.rate(ds),
-                    1.0 + interference.ETA_PER_RESIDENT * (len(ds) - 1))
-                for d, ds in by_dev.items()}
+            for d in r.devices:
+                by_dev.setdefault(d, []).append(
+                    (res.core_demand, res.bw_demand))
+        dev_rate = {d: (interference.rate(ds),
+                        1.0 + interference.ETA_PER_RESIDENT * (len(ds) - 1))
+                    for d, ds in by_dev.items()}
+        link_pressure = getattr(self.sched, "link_pressure", None)
+        out: Dict[int, Tuple[float, float]] = {}
+        for uid, r in self._running.items():
+            rate = min(dev_rate[d][0] for d in r.devices)
+            overhead = max(dev_rate[d][1] for d in r.devices)
+            if link_pressure is not None and r.task.resources.chips > 1:
+                rate /= link_pressure(r.task)
+            out[uid] = (rate, overhead)
+        return out
 
     def _submit_task(self, js: _JobState) -> None:
         """Hand the job's next task to the scheduler's admission path:
@@ -307,6 +366,20 @@ class Simulator:
         queue — wakeups on task_end/mark_dead/revive re-drive it."""
         task = js.job.tasks[js.next_task]
         js.t_queue = self.now
+        if not self.sched.can_ever_fit(task):
+            # never feasible (oversized footprint, or a gang shape the
+            # topology cannot hold): fail fast with the scheduler's
+            # explanation instead of parking forever — mirrors the live
+            # executor's crash-at-submit
+            js.job.crashed = True
+            js.job.error = self.sched.infeasible_reason(task)
+            js.job.finish_t = self.now
+            rec = ExecRecord(js.job.name, task.name, -1, self.now,
+                             self.now, self.now, crashed=True)
+            js.records.append(rec)
+            self.records.append(rec)
+            self._finish_job(js, crashed_job=True)
+            return
         self._blocked[task.uid] = js
 
         def cb(t: Task, placement: Optional[int], epoch: int,
@@ -323,23 +396,37 @@ class Simulator:
             self._submit_task(js)
         # drain admissions (task_end inside this loop can fire more)
         while self._admitted_buf:
-            js, task, dev = self._admitted_buf.pop(0)
+            js, task, placement = self._admitted_buf.pop(0)
             self._blocked.pop(task.uid, None)
-            if js.cancel_requested and dev is not None:
+            if js.cancel_requested and placement is not None \
+                    and placement is not DEADLINE_SHED:
                 # cancelled while parked-then-admitted: release the admission
                 self.sched.task_end(task)
                 self._end_cancelled(js, held_worker=True)
                 continue
-            if dev is None:
+            if placement is DEADLINE_SHED:
+                # parked past its deadline: the scheduler shed it at the
+                # drain — the job fails with SHED status, not CRASHED. A
+                # cancel that raced the shed wins (matches the live
+                # backend's _finish, where cancel_requested beats shed)
+                if js.cancel_requested:
+                    self._end_cancelled(js, held_worker=True)
+                else:
+                    self._end_shed(js)
+                continue
+            if placement is None:
                 # mark_dead shrank the fleet below this task's needs:
                 # the scheduler gave up on it — crashed at submit
                 js.job.crashed = True
+                js.job.error = js.job.error \
+                    or self.sched.infeasible_reason(task)
                 js.job.finish_t = self.now
                 self._finish_job(js, crashed_job=True)
                 continue
-            # memory-unsafe scheduler: admitted past capacity -> OOM
-            # crash after the startup delay (worker stays occupied)
-            if self.sched.devices[dev].oom():
+            devs = placement_devices(placement)
+            # memory-unsafe scheduler: admitted past capacity on any member
+            # -> OOM crash after the startup delay (worker stays occupied)
+            if any(self.sched.devices[d].oom() for d in devs):
                 self.sched.task_end(task)
                 js.job.crashed = True
                 self._crashing.append((self.now + self.crash_delay, js))
@@ -349,7 +436,7 @@ class Simulator:
             self._started_at[task.uid] = self.now
             self._solo[task.uid] = task.resources.est_seconds
             self._running[task.uid] = _Running(
-                task, js, task.resources.est_seconds, dev)
+                task, js, task.resources.est_seconds, devs)
 
     def _finish_job(self, js: _JobState, crashed_job: bool = False) -> None:
         js.done = True
@@ -369,6 +456,14 @@ class Simulator:
         self._cancelled += 1
         if held_worker:
             self._idle_workers += 1
+
+    def _end_shed(self, js: _JobState) -> None:
+        # a shed waiter was parked (holding a sim worker) but never admitted
+        js.done = True
+        js.shed = True
+        js.job.finish_t = self.now
+        self._shed += 1
+        self._idle_workers += 1
 
     def _reap_crashed(self) -> None:
         done = [(t, js) for t, js in self._crashing if t <= self.now + _EPS]
@@ -408,8 +503,9 @@ class Simulator:
                 self._dilations[key] = dur / self._solo[uid]
                 self._slowdowns[key] = rec.kwork / self._solo[uid]
             js = rec.job
-            record = ExecRecord(js.job.name, rec.task.name, rec.device,
-                                js.t_queue, self._started_at[uid], self.now)
+            record = ExecRecord(js.job.name, rec.task.name, rec.lead,
+                                js.t_queue, self._started_at[uid], self.now,
+                                gang_chips=len(rec.devices))
             js.records.append(record)
             self.records.append(record)
             if js.cancel_requested:

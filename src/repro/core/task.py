@@ -76,6 +76,11 @@ class Task:
     # first (EDF), then submission order. Stamped job-wide by Cluster.submit.
     priority: int = 0
     deadline_t: Optional[float] = None
+    # gang identity: multi-chip tasks (resources.chips > 1) carry a label
+    # naming the gang they belong to, propagated job -> task -> ExecRecord
+    # so a trace can be grouped by gang end to end. None for solo tasks
+    # (the executor backfills the job's gang_id at submit).
+    gang_id: Optional[str] = None
     # runtime bookkeeping (filled by scheduler/executor)
     device: Optional[int] = None
     arrival_t: float = 0.0
@@ -148,9 +153,14 @@ class Job:
     arrival_t: float = 0.0
     finish_t: float = -1.0
     crashed: bool = False
+    # why the job crashed, when the scheduler can say (e.g. the
+    # infeasible-placement fast-fail); empty for runner exceptions/OOMs
+    error: str = ""
     # admission class for every task in the job (see Task.priority)
     priority: int = 0
     deadline_t: Optional[float] = None
+    # gang label stamped onto every task lacking one (see Task.gang_id)
+    gang_id: Optional[str] = None
 
     @property
     def total_seconds(self) -> float:

@@ -1,0 +1,282 @@
+"""Pod/mesh topology model: the device-group substrate for gang placement.
+
+The paper schedules single-GPU tasks inside one node. At pod scale the
+schedulable unit for a multi-chip task is a *device group*: a contiguous,
+ICI-connected block of a (rows x cols) chip grid inside one pod, or — for
+tasks larger than a pod — a window of whole pods bridged by DCN. This module
+owns ALL of the grid math that ``scheduler/slice.py`` used to carry privately,
+plus the piece the schedulers never had: **per-link bandwidth accounting**.
+
+Model (TPU v5e-like, DESIGN.md §2):
+
+  * a chip is a ``DeviceState`` cell at ``(pod, row, col)``; flat device
+    index ``(pod * rows + row) * cols + col`` matches the executor's device
+    table;
+  * **ICI links** connect orthogonally adjacent cells within a pod (a mesh;
+    wraparound torus links are deliberately not modelled — contiguous slices
+    never need them);
+  * **DCN edges** connect consecutive pods (one aggregate edge per pod pair,
+    ~4x slower than an ICI link);
+  * a multi-chip task with ``collective_bytes`` puts a steady per-link load
+    on every link *internal* to its group: ring collectives move ~the full
+    payload through each link of the ring once per pass, so the per-link
+    share is ``collective_bytes / est_seconds / link_bw`` — the fraction of
+    that link's bandwidth the task occupies per wall-second while running.
+    ``reserve``/``release`` maintain the aggregate share per link so a
+    scheduler can check headroom at admission and a simulator can dilate
+    co-resident gangs that oversubscribe a shared link.
+
+Candidate enumeration is shape-aligned (a k-chip task considers near-square
+factorizations of k tiled at multiples of the shape), which keeps the search
+cheap and the torus unfragmented — the same policy the old slice scheduler
+used, now shared by every topology client.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+from repro.core.scheduler.base import DEFAULT_HBM, DeviceState
+from repro.core.task import ResourceVector
+
+# bandwidth constants (match repro.core.probe's roofline): one ICI link of a
+# v5e-class chip, and one aggregate DCN edge between two pods
+ICI_BW = 50e9
+DCN_BW = 12.5e9
+
+Cell = Tuple[int, int, int]            # (pod, row, col)
+# ("ici", cell_a, cell_b) with cell_a < cell_b, or ("dcn", pod_a, pod_b)
+Link = Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceRect:
+    """A contiguous rectangle of chips on one pod's (rows x cols) grid."""
+    pod: int
+    r0: int
+    c0: int
+    rows: int
+    cols: int
+
+    @property
+    def chips(self) -> int:
+        return self.rows * self.cols
+
+    def cells(self) -> Iterator[Cell]:
+        for r in range(self.r0, self.r0 + self.rows):
+            for c in range(self.c0, self.c0 + self.cols):
+                yield (self.pod, r, c)
+
+
+@dataclasses.dataclass(frozen=True)
+class GangReservation:
+    """An atomically-held device group: one rect (intra-pod gang) or a window
+    of whole-pod rects bridged by DCN. Duck-compatible with the old bare
+    ``SliceRect`` placement (``chips``, ``cells()``), plus the flat
+    ``device_indices`` the executor's device table and the simulator's busy
+    accounting consume."""
+    rects: Tuple[SliceRect, ...]
+    device_indices: Tuple[int, ...]
+
+    @property
+    def chips(self) -> int:
+        return len(self.device_indices)
+
+    @property
+    def lead(self) -> int:
+        """Flat index of the group's first cell — the placement an audit log
+        or a single-device consumer reports."""
+        return self.device_indices[0]
+
+    def cells(self) -> Iterator[Cell]:
+        for rect in self.rects:
+            yield from rect.cells()
+
+
+def placement_devices(placement) -> Tuple[int, ...]:
+    """Normalize a scheduler placement to flat device indices: an int from
+    the flat schedulers becomes a 1-tuple, a ``GangReservation`` contributes
+    its whole group."""
+    idx = getattr(placement, "device_indices", None)
+    if idx is not None:
+        return tuple(idx)
+    return (placement,)
+
+
+def slice_shapes(chips: int, rows: int, cols: int) -> List[Tuple[int, int]]:
+    """Near-square factorizations of ``chips`` that fit the grid (preferred
+    first: square slices minimize ring hop count for both mesh axes)."""
+    shapes = []
+    for r in range(1, chips + 1):
+        if chips % r:
+            continue
+        c = chips // r
+        if r <= rows and c <= cols:
+            shapes.append((r, c))
+    shapes.sort(key=lambda rc: abs(rc[0] - rc[1]))
+    return shapes
+
+
+class Topology:
+    """A multi-pod chip grid with per-chip state and per-link bandwidth
+    accounting. Schedulers are clients: they decide *policy* (which candidate
+    group to take, what counts as feasible); the topology owns *structure*
+    (cells, shapes, links) and the link ledger."""
+
+    def __init__(self, pods: int = 1, rows: int = 4, cols: int = 4,
+                 hbm_per_chip: int = DEFAULT_HBM,
+                 ici_bw: float = ICI_BW, dcn_bw: float = DCN_BW):
+        self.pods, self.rows, self.cols = pods, rows, cols
+        self.ici_bw, self.dcn_bw = ici_bw, dcn_bw
+        self.cells: Dict[Cell, DeviceState] = {
+            (p, r, c): DeviceState(index=self.flat_index((p, r, c)),
+                                   total_hbm=hbm_per_chip)
+            for p in range(pods) for r in range(rows) for c in range(cols)}
+        # link -> aggregate bandwidth share ([0, n) — may exceed 1 when a
+        # soft-link policy oversubscribes; the simulator dilates then)
+        self.link_used: Dict[Link, float] = {}
+        # task uid -> {link: share} charged at reserve time, so release is
+        # exact even if the task's resources object is rebuilt meanwhile
+        self._charges: Dict[int, Dict[Link, float]] = {}
+
+    # -- indexing -----------------------------------------------------------
+    @property
+    def pod_size(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def total_chips(self) -> int:
+        return self.pods * self.pod_size
+
+    def flat_index(self, cell: Cell) -> int:
+        p, r, c = cell
+        return (p * self.rows + r) * self.cols + c
+
+    def cell_of(self, flat: int) -> Cell:
+        c = flat % self.cols
+        pr = flat // self.cols
+        return (pr // self.rows, pr % self.rows, c)
+
+    def device_list(self) -> List[DeviceState]:
+        """Cells in flat-index order — the executor's device table view."""
+        return list(self.cells.values())
+
+    # -- candidate enumeration ----------------------------------------------
+    def _reservation(self, rects: Sequence[SliceRect]) -> GangReservation:
+        idx = tuple(self.flat_index(c) for rect in rects
+                    for c in rect.cells())
+        return GangReservation(tuple(rects), idx)
+
+    def candidate_groups(self, chips: int) -> Iterator[GangReservation]:
+        """Every device group a ``chips``-sized gang could hold: contiguous
+        rects inside one pod (shape-aligned tiling, near-square shapes
+        first), or — past one pod's capacity — windows of whole pods. The
+        caller filters by its own feasibility policy."""
+        if chips <= self.pod_size:
+            for (sr, sc) in slice_shapes(chips, self.rows, self.cols):
+                for pod in range(self.pods):
+                    for r0 in range(0, self.rows - sr + 1, sr):
+                        for c0 in range(0, self.cols - sc + 1, sc):
+                            yield self._reservation(
+                                [SliceRect(pod, r0, c0, sr, sc)])
+            return
+        if chips % self.pod_size:
+            return  # pod-spanning gangs are whole-pod multiples only
+        m = chips // self.pod_size
+        for p0 in range(0, self.pods - m + 1):
+            yield self._reservation(
+                [SliceRect(p, 0, 0, self.rows, self.cols)
+                 for p in range(p0, p0 + m)])
+
+    def has_feasible_shape(self, chips: int) -> bool:
+        """Does ANY candidate group of this size exist on the grid at all
+        (alive or not)? False means the gang shape itself is impossible —
+        e.g. 5 chips on a 4x4 pod (no 1x5 fits), or a non-pod-multiple
+        spanning request — and a scheduler should fail it fast rather than
+        park it forever."""
+        return next(iter(self.candidate_groups(chips)), None) is not None
+
+    # -- link model ----------------------------------------------------------
+    @staticmethod
+    def _ici_link(a: Cell, b: Cell) -> Link:
+        return ("ici", a, b) if a < b else ("ici", b, a)
+
+    def internal_links(self, res: GangReservation) -> List[Link]:
+        """Links a gang's collectives traverse: every ICI link between
+        adjacent cells inside each rect, plus the DCN edge between each
+        consecutive pod pair of a spanning reservation."""
+        links: List[Link] = []
+        for rect in res.rects:
+            for (p, r, c) in rect.cells():
+                if r + 1 < rect.r0 + rect.rows:
+                    links.append(self._ici_link((p, r, c), (p, r + 1, c)))
+                if c + 1 < rect.c0 + rect.cols:
+                    links.append(self._ici_link((p, r, c), (p, r, c + 1)))
+        pods_used = sorted(rect.pod for rect in res.rects)
+        for pa, pb in zip(pods_used, pods_used[1:]):
+            links.append(("dcn", pa, pb))
+        return links
+
+    def link_share(self, resources: ResourceVector,
+                   dcn: bool = False) -> float:
+        """Steady-state fraction of one link's bandwidth the task's
+        collectives occupy while it runs (ring model: the full payload
+        crosses each ring link once per pass). Clamped to 1.0 — a task
+        cannot use more than a link."""
+        if resources.chips <= 1 or resources.collective_bytes <= 0:
+            return 0.0
+        est = max(resources.est_seconds, 1e-12)
+        bw = self.dcn_bw if dcn else self.ici_bw
+        return min(resources.collective_bytes / est / bw, 1.0)
+
+    def link_charges(self, res: GangReservation,
+                     resources: ResourceVector) -> Dict[Link, float]:
+        """Per-link share this gang would add: ICI share on internal mesh
+        links, DCN share on pod-bridging edges."""
+        ici = self.link_share(resources)
+        dcn = self.link_share(resources, dcn=True)
+        return {link: (dcn if link[0] == "dcn" else ici)
+                for link in self.internal_links(res)
+                if (dcn if link[0] == "dcn" else ici) > 0.0}
+
+    def link_headroom_ok(self, res: GangReservation,
+                         resources: ResourceVector,
+                         tolerance: float = 1e-9) -> bool:
+        """Would reserving this group keep every affected link within its
+        bandwidth? (The hard-link admission check.)"""
+        for link, share in self.link_charges(res, resources).items():
+            if self.link_used.get(link, 0.0) + share > 1.0 + tolerance:
+                return False
+        return True
+
+    def max_link_load(self, res: GangReservation) -> float:
+        """Highest aggregate share on any link of the group — the soft-link
+        policy's tie-break input and the simulator's dilation input."""
+        return max((self.link_used.get(link, 0.0)
+                    for link in self.internal_links(res)), default=0.0)
+
+    def reserve_links(self, uid: int, res: GangReservation,
+                      resources: ResourceVector) -> None:
+        charges = self.link_charges(res, resources)
+        for link, share in charges.items():
+            self.link_used[link] = self.link_used.get(link, 0.0) + share
+        if charges:
+            self._charges[uid] = charges
+
+    def task_link_loads(self, uid: int) -> List[float]:
+        """Current aggregate share on each link task ``uid`` is charged on —
+        the simulator's ICI-dilation input (empty for link-free tasks)."""
+        return [self.link_used.get(link, 0.0)
+                for link in self._charges.get(uid, ())]
+
+    def release_links(self, uid: int) -> None:
+        for link, share in self._charges.pop(uid, {}).items():
+            left = self.link_used.get(link, 0.0) - share
+            if left <= 1e-12:
+                self.link_used.pop(link, None)
+            else:
+                self.link_used[link] = left
+
+    # -- liveness ------------------------------------------------------------
+    def alive_count(self) -> int:
+        return sum(1 for d in self.cells.values() if d.alive)

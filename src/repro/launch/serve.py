@@ -34,7 +34,7 @@ from repro.serve.decode import greedy_generate, make_prefill_step
 def serve(arch: str, *, requests: int = 16, batch: int = 4,
           prompt_len: int = 64, gen_len: int = 32, seed: int = 0,
           num_devices: int = 2, workers: int = 0,
-          deadline_s: float = 5.0) -> dict:
+          deadline_s: float = 5.0, shed_late: bool = False) -> dict:
     cfg = get_arch(arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(seed))
     prefill = jax.jit(make_prefill_step(cfg, attn_impl="flash_jnp"))
@@ -52,7 +52,11 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
             (batch, prompt_len, cfg.d_model), dtype=np.float32))
     vec = probe_fn(prefill, params, probe_batch)
 
-    cluster = Cluster(sched, workers=workers or num_devices)
+    # shed_late turns the deadline from an EDF ordering hint into (soft)
+    # enforcement: a request still parked when its deadline passes is failed
+    # with JobStatus.SHED at the next drain instead of served late
+    cluster = Cluster(sched, workers=workers or num_devices,
+                      shed_late=shed_late)
     handles = []
     t0 = time.time()
     # open arrival: each request batch is submitted as it "comes in", with
@@ -90,12 +94,17 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
     met = [h for h in handles if h.status is JobStatus.DONE
            and h.records and h.records[-1].t_end
            <= h.job.deadline_t]
+    # shed requests (deadline passed while parked) are reported SEPARATELY
+    # from deadlines_met: they consumed no device time at all, vs completed
+    # requests that merely finished late
+    shed = [h for h in handles if h.status is JobStatus.SHED]
     return {"requests": requests, "batches": n_batches,
             "tokens_generated": toks, "wall_s": wall,
             "tokens_per_s": toks / wall,
             "mean_batch_latency_s": float(np.mean(lat)) if lat else 0.0,
             "completed": stats["completed"], "crashed": stats["crashed"],
             "deadlines_met": len(met),
+            "shed": len(shed),
             "sched_attempts": stats["sched_attempts"],
             "placements": sched.placements}
 
@@ -112,15 +121,19 @@ def main():
                     help="execution-pool size (0 = one per device)")
     ap.add_argument("--deadline-s", type=float, default=5.0,
                     help="per-request admission deadline (EDF ordering)")
+    ap.add_argument("--shed-late", action="store_true",
+                    help="fail requests still parked past their deadline "
+                         "(JobStatus.SHED) instead of serving them late")
     args = ap.parse_args()
     res = serve(args.arch, requests=args.requests, batch=args.batch,
                 prompt_len=args.prompt_len, gen_len=args.gen_len,
                 num_devices=args.num_devices, workers=args.workers,
-                deadline_s=args.deadline_s)
+                deadline_s=args.deadline_s, shed_late=args.shed_late)
     print(f"[serve] {res['tokens_generated']} tokens in {res['wall_s']:.1f}s "
           f"({res['tokens_per_s']:.1f} tok/s, "
           f"batch latency {res['mean_batch_latency_s'] * 1e3:.0f} ms, "
           f"{res['deadlines_met']}/{res['batches']} deadlines met, "
+          f"{res['shed']} shed, "
           f"{res['sched_attempts']} admission attempts)")
 
 
