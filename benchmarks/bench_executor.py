@@ -133,8 +133,16 @@ def open_arrival(n: int, rate_hz: float, work_s: float = WORK_S
     return rows
 
 
-def run(depths=DEPTHS, *, arrival_n: int = 200, arrival_rate: float = 150.0,
+def run(depths=None, *, arrival_n=None, arrival_rate=None,
         smoke: bool = False) -> List[Dict[str, float]]:
+    # smoke picks its own tiny inputs so callers (benchmarks.run --smoke)
+    # need only forward the flag; explicit arguments still win
+    if depths is None:
+        depths = (5, 20) if smoke else DEPTHS
+    if arrival_n is None:
+        arrival_n = 24 if smoke else 200
+    if arrival_rate is None:
+        arrival_rate = 400.0 if smoke else 150.0
     rows = []
     print(f"{'depth':>6} {'mode':>8} {'makespan':>10} {'attempts':>9} "
           f"{'att/job':>8} {'turnaround':>11}")
@@ -170,8 +178,7 @@ def main():
                          "without writing results (the CI bitrot guard)")
     args = ap.parse_args()
     if args.smoke:
-        rows = run(depths=(5, 20), arrival_n=24, arrival_rate=400.0,
-                   smoke=True)
+        rows = run(smoke=True)
         assert len(rows) == 6, rows
         print("bench_executor --smoke OK")
     else:

@@ -1,0 +1,300 @@
+"""Preemption benchmark: preemptive EDF vs shedding vs waiting, on an
+OVERLOADED open-arrival trace (workloads.overload_mix).
+
+The scenario memory-binds by construction: long ~10 GB x ~20 s background
+jobs saturate every 16 GB device while short ~9 GB x ~1 s urgent jobs (each
+with a deadline a couple of seconds past its length) keep arriving. An
+urgent arrival therefore cannot co-reside with a background resident — it
+can only:
+
+  * **fifo**      — wait its turn with no admission ordering at all;
+  * **edf**       — jump the QUEUE (priority/EDF admission) but still wait
+                    for a background job many times its length to finish;
+  * **edf+shed**  — same, but give up (JobStatus.SHED) once its deadline
+                    passes while parked;
+  * **edf+preempt** — EVICT the min-cost background resident (checkpoint-
+                    based, work-conserving: the victim resumes at its
+                    remaining work + restore penalty, possibly on another
+                    device) and run immediately.
+
+All four systems replay the SAME seeded workload content and arrival
+schedule on the virtual clock. Reported per system: urgent deadline-met
+rate, urgent turnaround p50/p99, preemptions/migrations, background mean
+turnaround (the price the evicted class pays), and the mean kernel slowdown
+of NON-preempted jobs — the paper's <=2.5% co-residency degradation envelope
+must keep holding once eviction is in the mix.
+
+    PYTHONPATH=src python -m benchmarks.bench_preempt            # full
+    PYTHONPATH=src python -m benchmarks.bench_preempt --smoke    # CI guard
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core.cluster import Cluster, JobStatus
+from repro.core.executor import ExecJob
+from repro.core.preemption import PreemptionPolicy
+from repro.core.scheduler import MGBAlg3Scheduler, PreemptiveAlg3Scheduler
+from repro.core.task import Job, ResourceVector, Task, UnitTask
+from repro.core.workloads import overload_mix
+
+GB = 1024**3
+DEVICES = 4
+
+
+def _pct(vals: List[float], q: float) -> float:
+    """Nearest-rank percentile, well-defined when failed requests are
+    counted as +inf (np.percentile interpolates inf-inf into NaN)."""
+    if not vals:
+        return float("inf")
+    s = sorted(vals)
+    return float(s[max(min(int(np.ceil(q / 100 * len(s))) - 1,
+                           len(s) - 1), 0)])
+SIM_WORKERS = 256   # never the bottleneck — admission is the story
+# eviction budget sized to the full trace: 24 urgents over 8 backgrounds
+# needs ~3 evictions/job; 6 leaves headroom so immunity is a guardrail, not
+# the common case
+POLICY = PreemptionPolicy(min_runtime_s=0.25, budget=6, aging_step=1,
+                          checkpoint_penalty_s=0.5)
+
+
+def run_trace(rows: List[Dict], sched, *, ranked: bool = True,
+              shed: bool = False, preempt: Optional[bool] = None,
+              n_devices: int = DEVICES) -> Dict[str, float]:
+    """Replay one submission trace on the sim backend. ``ranked=False`` is
+    the FIFO baseline: priority/deadline stamps are withheld from admission
+    (deadlines are still measured against)."""
+    c = Cluster(sched, workers=SIM_WORKERS, backend="sim",
+                shed_late=shed, preempt=preempt)
+    entries = []
+    for row in rows:
+        c.run_until(row["t"])
+        h = c.submit(row["job"],
+                     priority=row["priority"] if ranked else 0,
+                     deadline_s=row["deadline_s"] if ranked else None)
+        entries.append((row, h))
+    c.drain()   # raises on a truncated (time-limited) drain
+    res = c._sim.result()
+
+    urgent = [(r, h) for r, h in entries if r["kind"] == "urgent"]
+    met = [h for r, h in urgent
+           if h.status is JobStatus.DONE
+           and h.job.finish_t <= r["t"] + r["deadline_s"]]
+    # a shed/failed urgent never completes: its turnaround is unbounded, and
+    # counting it as inf (rather than dropping it) keeps the percentile
+    # comparison honest — shedding must not look fast by failing the slow ones
+    u_turn = [h.job.finish_t - h.job.arrival_t
+              if h.status is JobStatus.DONE else float("inf")
+              for _, h in urgent]
+    bg_turn = [h.job.finish_t - h.job.arrival_t for r, h in entries
+               if r["kind"] == "background" and h.status is JobStatus.DONE]
+    # degradation envelope: per-kernel slowdown of jobs the preemptor never
+    # touched (the co-residency cost the paper bounds at <=2.5%)
+    untouched = {r["job"].tasks[0].name for r, _ in entries
+                 if r["job"].tasks[0].preempt_count == 0}
+    slows = [s for name, s in res.slowdowns.items() if name in untouched]
+    return {
+        "sched": sched.name + ("+shed" if shed else "")
+                 + ("" if ranked else " (fifo)"),
+        "n_devices": n_devices,
+        "makespan_s": res.makespan,
+        "completed": res.completed, "crashed": res.crashed,
+        "shed": res.shed,
+        "urgent_met": len(met), "urgent_total": len(urgent),
+        "deadline_met_rate": len(met) / max(len(urgent), 1),
+        "urgent_turn_p50_s": _pct(u_turn, 50),
+        "urgent_turn_p99_s": _pct(u_turn, 99),
+        "bg_mean_turnaround_s": float(np.mean(bg_turn)) if bg_turn else 0.0,
+        "preemptions": getattr(sched, "preemptions", 0),
+        "migrations": getattr(sched, "migrations", 0),
+        "nonpreempted_slowdown_pct":
+            100.0 * (float(np.mean(slows)) - 1.0) if slows else 0.0,
+    }
+
+
+def compare(seed: int = 0, *, n_devices: int = DEVICES,
+            n_background: int = 8, n_bystander: int = 4,
+            n_urgent: int = 24) -> List[Dict[str, float]]:
+    """The acceptance comparison. Job objects carry runtime state, so each
+    system replays a FRESH materialization of the seeded trace."""
+    def fresh() -> List[Dict]:
+        return overload_mix(seed, n_background=n_background,
+                            n_bystander=n_bystander, n_urgent=n_urgent)
+
+    return [
+        run_trace(fresh(), MGBAlg3Scheduler(n_devices), ranked=False,
+                  n_devices=n_devices),
+        run_trace(fresh(), MGBAlg3Scheduler(n_devices),
+                  n_devices=n_devices),
+        run_trace(fresh(), MGBAlg3Scheduler(n_devices), shed=True,
+                  n_devices=n_devices),
+        run_trace(fresh(),
+                  PreemptiveAlg3Scheduler(n_devices, preempt_policy=POLICY),
+                  preempt=True, n_devices=n_devices),
+    ]
+
+
+def _print_rows(rows: List[Dict[str, float]]) -> None:
+    for r in rows:
+        print(f"{r['sched']:>22}: met={r['urgent_met']:>2}/"
+              f"{r['urgent_total']} ({100 * r['deadline_met_rate']:5.1f}%) "
+              f"urgent-turn p50={r['urgent_turn_p50_s']:6.2f}s "
+              f"p99={r['urgent_turn_p99_s']:6.2f}s "
+              f"bg-turn={r['bg_mean_turnaround_s']:6.2f}s "
+              f"shed={r['shed']:>2} preempt={r['preemptions']:>2} "
+              f"migr={r['migrations']:>2} "
+              f"slowdown={r['nonpreempted_slowdown_pct']:.2f}%")
+
+
+def run(seed: int = 0, smoke: bool = False) -> List[Dict[str, float]]:
+    t0 = time.time()
+    if smoke:
+        rows = compare(seed, n_devices=2, n_background=3, n_bystander=2,
+                       n_urgent=5)
+    else:
+        rows = compare(seed)
+    _print_rows(rows)
+    fifo, edf, shed, pre = rows
+    assert all(r["crashed"] == 0 for r in rows), rows
+    # the acceptance claim: preemptive EDF strictly beats waiting (EDF),
+    # shedding, and FIFO on deadline-met rate, and beats them on urgent p99
+    # turnaround, while the co-residency degradation of untouched jobs stays
+    # inside the paper's <=2.5% envelope
+    for other in (fifo, edf, shed):
+        if smoke:  # tiny trace: both ends may saturate, allow ties
+            assert pre["deadline_met_rate"] >= other["deadline_met_rate"], rows
+        else:
+            assert pre["deadline_met_rate"] > other["deadline_met_rate"], rows
+        assert pre["urgent_turn_p99_s"] <= other["urgent_turn_p99_s"], rows
+    assert pre["preemptions"] > 0, rows
+    assert pre["nonpreempted_slowdown_pct"] <= 2.5, rows
+    print(f"\npreemptive EDF: {100 * pre['deadline_met_rate']:.0f}% deadlines "
+          f"met vs {100 * edf['deadline_met_rate']:.0f}% (EDF) / "
+          f"{100 * shed['deadline_met_rate']:.0f}% (shed) / "
+          f"{100 * fifo['deadline_met_rate']:.0f}% (FIFO); "
+          f"non-preempted slowdown {pre['nonpreempted_slowdown_pct']:.2f}% "
+          f"({time.time() - t0:.1f}s)")
+    if not smoke:
+        save_json("bench_preempt.json", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# live/sim eviction-order parity smoke (the CI guard's second leg)
+# ---------------------------------------------------------------------------
+
+def _parity_jobs():
+    """Hand-built two-device scenario with an unambiguous victim: bg-small
+    (10 GB, 5 s left) is strictly cheaper to evict than bg-big (10.5 GB,
+    30 s), so both backends must log the same single eviction and the same
+    admission order."""
+    def mk(name, gb, est, prio=0):
+        vec = ResourceVector(hbm_bytes=int(gb * GB), flops=1e9,
+                             bytes_accessed=1e9, est_seconds=est,
+                             core_demand=0.4, bw_demand=0.3)
+        unit = UnitTask(fn=None, memobjs=frozenset({name}), resources=vec,
+                        name=name)
+        return Job(tasks=[Task(units=[unit], name=name)], name=name,
+                   priority=prio)
+    return (mk("bg-small", 10.0, 5.0), mk("bg-big", 10.5, 30.0),
+            mk("urgent", 9.0, 1.0, prio=5))
+
+
+def _order(sched, handles) -> List[str]:
+    names = {h.job.tasks[0].uid: h.job.name for h in handles}
+    return [names[uid] for uid, _ in sched.placements]
+
+
+def _victims(sched, handles) -> List[str]:
+    names = {h.job.tasks[0].uid: h.job.name for h in handles}
+    return [names[uid] for uid, _ in sched.preempt_log]
+
+
+def smoke_parity(seed: int = 0) -> None:
+    policy = PreemptionPolicy(min_runtime_s=0.0, budget=3,
+                              checkpoint_penalty_s=0.2)
+
+    # sim leg
+    sched_sim = PreemptiveAlg3Scheduler(2, preempt_policy=policy)
+    sim = Cluster(sched_sim, workers=8, backend="sim")
+    s_small, s_big, s_urgent = _parity_jobs()
+    hs = [sim.submit(s_small), sim.submit(s_big)]
+    sim.run_until(2.0)
+    hs.append(sim.submit(s_urgent))
+    sim.drain()
+    assert all(h.status is JobStatus.DONE for h in hs)
+    sim_victims, sim_order = _victims(sched_sim, hs), _order(sched_sim, hs)
+
+    # live leg: cooperative runners — the background blocks until preempted
+    # (first attempt) and returns promptly when resumed (second attempt)
+    sched_live = PreemptiveAlg3Scheduler(2, preempt_policy=policy)
+    live = Cluster(sched_live, workers=4)
+    l_small, l_big, l_urgent = _parity_jobs()
+
+    import threading
+    release = threading.Event()
+
+    def cooperative(ej_box, attempts):
+        def runner(device):
+            attempts.append(device)
+            if len(attempts) == 1:
+                # first dispatch: run "forever" until evicted or released
+                while not ej_box[0].preempted.wait(0.01):
+                    if release.is_set():
+                        return
+            # resumed dispatch: remaining work is instant at test scale
+        return runner
+
+    small_attempts: List[object] = []
+    big_attempts: List[object] = []
+    ej_small_box: List[ExecJob] = []
+    ej_big_box: List[ExecJob] = []
+    ej_small = ExecJob(job=l_small,
+                       runners=[cooperative(ej_small_box, small_attempts)])
+    ej_small_box.append(ej_small)
+    ej_big = ExecJob(job=l_big,
+                     runners=[cooperative(ej_big_box, big_attempts)])
+    ej_big_box.append(ej_big)
+    hl = [live.submit(ej_small), live.submit(ej_big)]
+    time.sleep(0.2)   # both resident
+    hl.append(live.submit(ExecJob(job=l_urgent,
+                                  runners=[lambda d: time.sleep(0.01)])))
+    hl[2].result(timeout=30)
+    release.set()
+    live.drain()
+    live.shutdown()
+    assert all(h.status is JobStatus.DONE for h in hl), \
+        [(h.job.name, h.status) for h in hl]
+    live_victims, live_order = _victims(sched_live, hl), _order(sched_live, hl)
+
+    assert sim_victims == live_victims == ["bg-small"], \
+        (sim_victims, live_victims)
+    assert sim_order == live_order, (sim_order, live_order)
+    assert len(small_attempts) == 2, small_attempts   # evicted then resumed
+    assert all(d.used_hbm == 0 and d.used_slots == 0
+               for d in sched_live.devices)
+    print(f"parity smoke: eviction order {live_victims} and admission order "
+          f"{live_order} identical on live + sim backends")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace on the sim backend plus a live/sim "
+                         "eviction-order parity check; asserts without "
+                         "writing results (CI guard)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.seed, smoke=args.smoke)
+    if args.smoke:
+        smoke_parity(args.seed)
+        print("bench_preempt --smoke OK")
+
+
+if __name__ == "__main__":
+    main()

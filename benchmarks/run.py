@@ -2,6 +2,7 @@
 JSON artifacts under benchmarks/results/.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig5]
+    PYTHONPATH=src python -m benchmarks.run --only executor,gang,preempt --smoke
 """
 from __future__ import annotations
 
@@ -9,9 +10,9 @@ import argparse
 import time
 
 from benchmarks import (
-    bench_executor, bench_gang, fig4_alg2_vs_alg3, fig5_throughput,
-    fig6_nn_schedgpu, kernels_bench, table2_crashes, table3_turnaround,
-    table4_slowdown,
+    bench_executor, bench_gang, bench_preempt, fig4_alg2_vs_alg3,
+    fig5_throughput, fig6_nn_schedgpu, kernels_bench, table2_crashes,
+    table3_turnaround, table4_slowdown,
 )
 
 EXPERIMENTS = {
@@ -24,20 +25,42 @@ EXPERIMENTS = {
     "kernels": kernels_bench.run,
     "executor": bench_executor.run,
     "gang": bench_gang.run,
+    "preempt": bench_preempt.run,
 }
+
+# experiments whose run() takes smoke= (tiny inputs, assert-only, no JSON);
+# --smoke forwards to these and leaves the rest at full size
+SMOKE_CAPABLE = frozenset({"executor", "gang", "preempt"})
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=sorted(EXPERIMENTS))
+    ap.add_argument("--only", default=None,
+                    help="comma-separated experiment list, e.g. "
+                         f"'fig5' or 'executor,gang,preempt' "
+                         f"(available: {', '.join(sorted(EXPERIMENTS))})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="forward smoke mode to the experiments that "
+                         f"support it ({', '.join(sorted(SMOKE_CAPABLE))})")
     args = ap.parse_args()
-    names = [args.only] if args.only else list(EXPERIMENTS)
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in EXPERIMENTS]
+        if unknown:
+            ap.error(f"unknown experiment(s) {', '.join(unknown)} "
+                     f"(available: {', '.join(sorted(EXPERIMENTS))})")
+    else:
+        names = list(EXPERIMENTS)
     t0 = time.time()
     for name in names:
         print(f"\n=== {name} " + "=" * (70 - len(name)))
-        EXPERIMENTS[name]()
-    print(f"\nall benchmarks done in {time.time() - t0:.0f}s; "
-          f"artifacts in benchmarks/results/")
+        if args.smoke and name in SMOKE_CAPABLE:
+            EXPERIMENTS[name](smoke=True)
+        else:
+            EXPERIMENTS[name]()
+    where = ("(smoke runs are assert-only: no new artifacts)" if args.smoke
+             else "artifacts in benchmarks/results/")
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s; {where}")
 
 
 if __name__ == "__main__":

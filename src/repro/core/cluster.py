@@ -45,6 +45,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 from repro.core.executor import ExecJob, ExecRecord, Executor, _JobRun
 from repro.core.scheduler.base import Scheduler
+from repro.core.scheduler.preempt import PreemptionMixin
 from repro.core.simulator import Simulator, _JobState
 from repro.core.task import Job
 
@@ -135,7 +136,7 @@ class Cluster:
                  backend: str = "live",
                  devices: Optional[Sequence[object]] = None,
                  poll_interval: float = 0.05, crash_delay: float = 8.0,
-                 shed_late: bool = False):
+                 shed_late: bool = False, preempt: Optional[bool] = None):
         self.sched = scheduler
         self.backend = backend
         # deadline enforcement (the shedding half): a parked waiter whose
@@ -143,6 +144,20 @@ class Cluster:
         # admission drain instead of being admitted late. Off by default —
         # deadlines stay a pure EDF ordering hint unless the operator opts in
         scheduler.shed_expired = shed_late
+        # deadline/priority enforcement (the eviction half): preempt=True
+        # lets an arriving waiter that strictly outranks a resident evict it
+        # (checkpoint-based, work-conserving — see scheduler.preempt); the
+        # scheduler must be preemption-capable. preempt=False disables it on
+        # a capable scheduler; None (default) keeps the scheduler's own
+        # setting (preemptive classes enable themselves at construction).
+        if preempt is not None:
+            if preempt and not isinstance(scheduler, PreemptionMixin):
+                raise ValueError(
+                    f"preempt=True needs a preemption-capable scheduler, "
+                    f"got {type(scheduler).__name__} — use "
+                    f"PreemptiveAlg2Scheduler / PreemptiveAlg3Scheduler / "
+                    f"PreemptiveGangScheduler from repro.core.scheduler")
+            scheduler.preempt_enabled = bool(preempt)
         n_workers = workers if workers is not None \
             else len(scheduler.devices)
         self._ex: Optional[Executor] = None
@@ -162,7 +177,11 @@ class Cluster:
             raise ValueError(f"unknown backend {backend!r} "
                              "(expected 'live' or 'sim')")
         self.handles: List[JobHandle] = []
+        # scheduler counters are lifetime totals; snapshot them so a cluster
+        # built over a reused scheduler reports only its own activity
         self._attempts0 = getattr(scheduler, "begin_attempts", 0)
+        self._preempt0 = getattr(scheduler, "preemptions", 0)
+        self._migr0 = getattr(scheduler, "migrations", 0)
         self._submit_lock = threading.Lock()
 
     # -- submission ----------------------------------------------------------
@@ -219,11 +238,21 @@ class Cluster:
     def drain(self) -> None:
         """Barrier: block (live) or advance the virtual clock (sim) until
         every job submitted so far has resolved. New submissions remain legal
-        afterwards — drain is a checkpoint, not a shutdown."""
+        afterwards — drain is a checkpoint, not a shutdown. A sim drain that
+        hits its virtual time limit with work still pending raises instead
+        of returning quietly: a capped run must not read as a completed one."""
         if self._ex is not None:
             self._ex.drain()
         else:
-            self._sim.drain()
+            self._sim_drain_checked()
+
+    def _sim_drain_checked(self) -> None:
+        res = self._sim.drain()
+        if res.truncated:
+            raise RuntimeError(
+                f"simulation drain truncated at virtual t={self._sim.now:.0f}s "
+                f"with work still pending ({res.completed} completed) — the "
+                f"time limit was hit, not the end of the trace")
 
     def step(self) -> bool:
         """Sim backend: advance the virtual clock one event (False when
@@ -250,7 +279,7 @@ class Cluster:
         if self._ex is not None:
             self._ex.shutdown()
         else:
-            self._sim.drain()
+            self._sim_drain_checked()
 
     def __enter__(self) -> "Cluster":
         return self
@@ -270,10 +299,13 @@ class Cluster:
         cancelled = sum(1 for h in self.handles
                         if h.status is JobStatus.CANCELLED)
         shed = sum(1 for h in self.handles if h.status is JobStatus.SHED)
+        preemptions = getattr(self.sched, "preemptions", 0) - self._preempt0
+        migrations = getattr(self.sched, "migrations", 0) - self._migr0
         if not jobs:
             return {"makespan_s": 0.0, "throughput_jobs_per_s": 0.0,
                     "completed": 0, "crashed": 0, "mean_turnaround_s": 0.0,
-                    "sched_attempts": 0, "cancelled": 0, "shed": 0}
+                    "sched_attempts": 0, "cancelled": 0, "shed": 0,
+                    "preemptions": preemptions, "migrations": migrations}
         t0 = min(j.arrival_t for j in jobs)
         t1 = max((j.finish_t for j in jobs if j.finish_t >= 0),
                  default=t0)
@@ -285,6 +317,8 @@ class Cluster:
             "crashed": crashed,
             "cancelled": cancelled,
             "shed": shed,
+            "preemptions": preemptions,
+            "migrations": migrations,
             "mean_turnaround_s": sum(
                 h.job.finish_t - h.job.arrival_t for h in done
                 ) / max(len(done), 1),

@@ -77,6 +77,19 @@ class ExecJob:
     job: Job
     runners: List[Callable[[object], None]]
     buffers: Dict[str, lazy.LazyBuffer] = dataclasses.field(default_factory=dict)
+    # cooperative preemption surface (set/observed only under a preemptive
+    # scheduler): ``preempted`` is SET when the scheduler evicts this job's
+    # in-flight task and CLEARED at each (re)dispatch — a cooperative runner
+    # polls it between steps and returns early, since the eviction already
+    # released the reservation and the epoch fence voids this attempt's
+    # completion. ``on_preempt`` (optional) fires once per eviction with the
+    # evicted Task: wire it to train/checkpoint.py's save for training tasks
+    # so the resumed dispatch — possibly on a DIFFERENT device, which is how
+    # migration falls out of requeue + placement — restores from the last
+    # committed step instead of recomputing.
+    preempted: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    on_preempt: Optional[Callable[[Task], None]] = None
 
 
 def _empty_stats() -> Dict[str, float]:
@@ -130,6 +143,27 @@ class Executor:
         self.device_map = [real[i % len(real)] for i in range(n)]
         self.records: List[ExecRecord] = []
         self._rec_lock = threading.Lock()
+        # preemptive scheduler: observe evictions so the victim's running
+        # attempt is signalled to stop cooperatively (and its checkpoint
+        # callback fires) — the re-admission callback then re-dispatches it
+        self._jr_by_uid: Dict[int, "_JobRun"] = {}
+        # per-task attempt serialization: a re-dispatched incarnation must
+        # not run concurrently with a still-executing superseded attempt —
+        # they share ExecJob.buffers and the single `preempted` event, so
+        # attempt 2 waits for attempt 1's runner to exit (an evicted
+        # cooperative runner exits promptly; a non-cooperative one finishes
+        # its kernel, exactly the cost it would pay anyway)
+        self._attempt_locks: Dict[int, threading.Lock] = {}
+        # uid -> epoch of the attempt currently armed on ExecJob.preempted,
+        # guarded by _signal_lock: an eviction notice is addressed to its
+        # victim's superseded epoch, and delivery may lag (the delivering
+        # thread holds no lock) — a notice older than the armed attempt must
+        # be dropped, or it would stop the FRESH attempt and turn its early
+        # return into a current-epoch completion (silent lost work)
+        self._armed_epoch: Dict[int, int] = {}
+        self._signal_lock = threading.Lock()
+        if hasattr(scheduler, "add_preempt_listener"):
+            scheduler.add_preempt_listener(self._on_preempt)
         # open-arrival engine state
         self._ready: Optional["queue_mod.Queue[Optional[_Ready]]"] = None
         self._threads: List[threading.Thread] = []
@@ -268,6 +302,10 @@ class Executor:
 
     def _finish(self, jr: _JobRun, *, crashed: bool,
                 cancelled: bool = False, shed: bool = False) -> None:
+        for t in jr.ej.job.tasks:
+            self._jr_by_uid.pop(t.uid, None)
+            self._attempt_locks.pop(t.uid, None)
+            self._armed_epoch.pop(t.uid, None)
         with self._state:
             if jr.done.is_set():
                 return  # double-finish guard (cancel raced a completion)
@@ -288,12 +326,38 @@ class Executor:
         if jr.on_done is not None:
             jr.on_done(jr)
 
+    def _on_preempt(self, victims) -> None:
+        """Eviction notice from the scheduler: signal the running attempt to
+        stop cooperatively and take the job's checkpoint. Each notice names
+        the victim's SUPERSEDED epoch; if a fresh attempt has already armed
+        itself with a newer epoch (late delivery — the delivering thread
+        holds no lock), the notice is dropped: stopping the fresh attempt
+        would count its early return as a real completion. The superseded
+        attempt's eventual ``task_end`` is epoch-fenced either way."""
+        for t, epoch in victims:
+            jr = self._jr_by_uid.get(t.uid)
+            if jr is None:
+                continue
+            with self._signal_lock:
+                stale = self._armed_epoch.get(t.uid, -1) > epoch
+                if not stale:
+                    jr.ej.preempted.set()
+            if not stale and jr.ej.on_preempt is not None:
+                try:
+                    jr.ej.on_preempt(t)
+                except Exception:
+                    # a failing checkpoint must not poison the scheduler's
+                    # notify path; the task simply restarts from its last
+                    # committed state
+                    pass
+
     def _submit_next(self, jr: _JobRun) -> None:
         if jr.cancel_requested:
             self._finish(jr, crashed=False, cancelled=True)
             return
         idx = jr.next_task
         task = jr.ej.job.tasks[idx]
+        self._jr_by_uid[task.uid] = jr
         jr.t_queue = time.monotonic()
         if not self.sched.can_ever_fit(task):
             # never feasible on any alive device (or, for a gang, no
@@ -360,20 +424,53 @@ class Executor:
                 now, now, crashed=True, gang_chips=len(devs)))
             self._finish(jr, crashed=True)
             return
-        t_start = time.monotonic()
-        jr.started = True
+        # serialize with any still-running superseded attempt of this task,
+        # then arm the cooperative-preemption surface: clear FIRST, then
+        # re-check the epoch. An eviction racing this dispatch lands on one
+        # side or the other: before the re-check, its epoch bump voids this
+        # attempt (the eaten event cannot be meant for a running attempt —
+        # the lock guarantees none is); after it, the notice finds the
+        # cleared event and stops the runner below.
+        if task.uid not in self._jr_by_uid:
+            return  # job already resolved: stale straggler dispatch
+        lock = self._attempt_locks.setdefault(task.uid, threading.Lock())
         crashed = False
-        try:
-            # lazy runtime: replay buffer queues on the gang's lead device,
-            # then launch the task's unit group as ONE bound dispatch — a
-            # single-chip runner receives its device, a gang runner receives
-            # the ordered device list of its reservation
-            lazy.kernel_launch_prepare(jr.ej.buffers, self.device_map[lead])
-            bound = (self.device_map[lead] if len(devs) == 1
-                     else [self.device_map[d] for d in devs])
-            jr.ej.runners[item.task_idx](bound)
-        except Exception:
-            crashed = True
+        t_start = None
+        with lock:
+            with self._signal_lock:
+                # clear + arm atomically w.r.t. notice delivery: from here a
+                # notice is delivered only if addressed to THIS epoch (or a
+                # later one, which cannot exist yet)
+                jr.ej.preempted.clear()
+                self._armed_epoch[task.uid] = item.epoch
+            if self.sched.admission_epoch(task) == item.epoch:
+                # the execution window starts only once any superseded
+                # attempt has exited — its tail must not be charged to
+                # this attempt's record
+                t_start = time.monotonic()
+                jr.started = True
+                try:
+                    # lazy runtime: replay buffer queues on the gang's lead
+                    # device, then launch the task's unit group as ONE bound
+                    # dispatch — a single-chip runner receives its device, a
+                    # gang runner receives the ordered device list of its
+                    # reservation
+                    lazy.kernel_launch_prepare(jr.ej.buffers,
+                                               self.device_map[lead])
+                    bound = (self.device_map[lead] if len(devs) == 1
+                             else [self.device_map[d] for d in devs])
+                    jr.ej.runners[item.task_idx](bound)
+                except Exception:
+                    crashed = True
+        if t_start is None:
+            # superseded between pool pickup and dispatch. If the fresh
+            # incarnation meanwhile finished the whole job, _finish's
+            # cleanup may have raced our setdefault — reap the entries it
+            # can no longer see
+            if jr.done.is_set():
+                self._attempt_locks.pop(task.uid, None)
+                self._armed_epoch.pop(task.uid, None)
+            return
         # epoch fence: if the device died mid-run the task was evicted and
         # re-enqueued — this completion is stale, the fresh incarnation
         # owns the job's progress (and the resources were already freed)

@@ -24,6 +24,13 @@ from typing import Sequence, Tuple
 
 ETA_PER_RESIDENT = 0.008   # calibrated: 4 residents -> ~2.4% overhead
 
+# Checkpoint/restore penalty a preempted task pays when it resumes (the
+# simulator charges it before new progress; a live training task pays it
+# inside train/checkpoint.py's restore path). Calibrated to the repo's
+# AsyncCheckpointer scale: a snapshot+restore round trip of a few-GB train
+# state is sub-second, small against the 8-40 s benchmark jobs it protects.
+CHECKPOINT_PENALTY_S = 0.5
+
 Demand = Tuple[float, float]   # (core_demand, bw_demand)
 
 

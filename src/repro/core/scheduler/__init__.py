@@ -8,4 +8,8 @@ from repro.core.scheduler.gang import GangScheduler  # noqa: F401
 from repro.core.scheduler.mgb import (  # noqa: F401
     MGBAlg2Scheduler, MGBAlg3Scheduler,
 )
+from repro.core.scheduler.preempt import (  # noqa: F401
+    PreemptionMixin, PreemptiveAlg2Scheduler, PreemptiveAlg3Scheduler,
+    PreemptiveGangScheduler,
+)
 from repro.core.scheduler.slice import SliceScheduler  # noqa: F401

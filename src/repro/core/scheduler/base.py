@@ -154,6 +154,15 @@ class WaiterQueueMixin:
         self._waiters: List[_Waiter] = []
         self._seq = 0           # arrival counter (FIFO within a class)
         self._restart_seq = 0   # decreasing: newest restart leads its class
+        # preemption (off unless a PreemptionMixin host enables it): when a
+        # waiter cannot be admitted from free capacity, the admission paths
+        # offer it to _preempt_admit_locked, which may evict lower-ranked
+        # residents to make room (the hook is a no-op here)
+        self.preempt_enabled = False
+        # notifications (e.g. preemption notices to the executor/simulator)
+        # buffered under the lock and delivered by _fire_deferred OUTSIDE it,
+        # strictly before any admission callback fired afterwards
+        self._deferred: List[Callable[[], None]] = []
         # uid -> callback for tasks admitted through the waiter path; consulted
         # by mark_dead to re-enqueue evicted tasks
         self._admit_cbs: Dict[int, AdmitCallback] = {}
@@ -181,7 +190,13 @@ class WaiterQueueMixin:
         else:
             self._seq += 1
             seq = self._seq
-        w = _Waiter(task, callback, getattr(task, "priority", 0),
+        # admission rank = declared class + anti-starvation aging (the
+        # preemptive layer adds age_boost per eviction); the boost is kept
+        # out of task.priority so eviction decisions stay on raw classes
+        w = _Waiter(task,
+                    callback,
+                    getattr(task, "priority", 0)
+                    + getattr(task, "age_boost", 0),
                     getattr(task, "deadline_t", None), restart, seq)
         bisect.insort(self._waiters, w, key=lambda x: x.key)
         return w
@@ -215,6 +230,20 @@ class WaiterQueueMixin:
         one)."""
         return True
 
+    def _preempt_admit_locked(self, task: Task):
+        """Preemption hook (no-op unless a PreemptionMixin host overrides):
+        called under the lock when ``task`` cannot be admitted from free
+        capacity. May evict strictly lower-ranked residents (re-enqueueing
+        them via ``_requeue_evicted_locked``) and return the placement the
+        eviction made possible, or None to leave the waiter parked."""
+        return None
+
+    def _forget_task_locked(self, task: Task) -> None:
+        """Terminal-exit hook: ``task`` is leaving the queue for good
+        without a current-epoch ``task_end`` (deadline shed, or the
+        impossible-after-shrink give-up). Hosts carrying per-task
+        bookkeeping (the preemption layer's ledger) drop it here."""
+
     # -- admission ----------------------------------------------------------
     def admit_or_enqueue(self, task: Task, callback: AdmitCallback) -> bool:
         """Try to admit ``task``; on success fire ``callback`` immediately,
@@ -225,14 +254,29 @@ class WaiterQueueMixin:
         task can NEVER be admitted, the callback fires once with
         ``placement=None`` — the caller must give up, not retry. Returns True
         iff admitted immediately."""
+        fired: List[Tuple[_Waiter, Any, int]] = []
         with self._lock:
             placement = self._admit_locked(task)
+            if placement is None and self.preempt_enabled:
+                # an urgent arrival may evict strictly lower-ranked residents
+                # instead of parking behind them (preemptive deadline/priority
+                # enforcement); evicted victims re-enter the queue at the
+                # front of their class carrying their progress credit
+                placement = self._preempt_admit_locked(task)
+                if placement is not None:
+                    # the eviction may have freed capacity beyond what this
+                    # arrival consumed (a whole-gang victim's other cells,
+                    # or a victim bigger than the preemptor): offer it to
+                    # parked waiters NOW, like every other freeing path
+                    fired = self._drain_locked()
             if placement is None:
                 self._enqueue_locked(task, callback)
                 return False
             self._admit_cbs[task.uid] = callback
             epoch = self._epochs.get(task.uid, 0)
+        self._fire_deferred()
         callback(task, placement, epoch)
+        self._fire(fired)
         return True
 
     def task_begin_blocking(self, task: Task,
@@ -284,38 +328,96 @@ class WaiterQueueMixin:
             wakeup, not O(queue)."""
         fired: List[Tuple[_Waiter, Any, int]] = []
         still: List[_Waiter] = []
-        failed: List[Any] = []  # ResourceVectors infeasible this pass
+        failed: List[Any] = []    # ResourceVectors infeasible this pass
+        # (vector, raw priority, deadline) of waiters whose PREEMPTION
+        # attempt failed this pass. A later waiter is skipped only when a
+        # failed entry DOMINATES it on raw eviction power — same vector and
+        # (higher raw priority, or equal priority and no-later deadline) —
+        # because only then is its eligible victim set provably a subset.
+        # Scan order alone is NOT enough: admission rank includes age_boost
+        # and restart-front-of-class, which outranks() ignores, so a
+        # later-scanned waiter can hold strictly more eviction rights.
+        # Keeps a deep homogeneous queue at O(1) plans per wakeup.
+        pfailed: List[Tuple[Any, int, float]] = []
         now = self._clock() if self.shed_expired else None
-        for w in self._waiters:  # already sorted by rank
+        # scan a snapshot: a mid-scan preemption re-enqueues its victims into
+        # self._waiters (emptied here), so they survive the final merge
+        # instead of being overwritten by the survivor list
+        pending, self._waiters = self._waiters, []
+        for w in pending:  # already sorted by rank
             if (now is not None and w.deadline_t is not None
                     and now > w.deadline_t):
                 # too late to be worth running: shed instead of admitting
                 self._admit_cbs.pop(w.task.uid, None)
+                self._forget_task_locked(w.task)
                 fired.append((w, DEADLINE_SHED,
                               self._epochs.get(w.task.uid, 0)))
                 continue
+            placement = None
             if freed is not None and not self._hint_may_fit(w.task, freed):
                 self.hint_skips += 1
-                still.append(w)
-                continue
-            res = w.task.resources
-            if any(f == res for f in failed):
-                still.append(w)
-                continue
-            placement = self._admit_locked(w.task)
+            elif any(f == w.task.resources for f in failed):
+                pass  # identical vector already failed this pass
+            else:
+                placement = self._admit_locked(w.task)
+                if placement is None and len(failed) < self._DRAIN_MEMO:
+                    failed.append(w.task.resources)
+            if placement is None and self.preempt_enabled:
+                tprio = getattr(w.task, "priority", 0)
+                tdl = w.task.deadline_t if w.task.deadline_t is not None \
+                    else math.inf
+                dominated = any(
+                    res == w.task.resources
+                    and (prio > tprio or (prio == tprio and dl <= tdl))
+                    for res, prio, dl in pfailed)
+                if dominated:
+                    placement = None
+                else:
+                    # free capacity (even hinted/memoized as insufficient)
+                    # cannot take this waiter — but eviction of strictly
+                    # lower-ranked residents might; min-runtime maturing
+                    # between drains is why this retries even when no
+                    # capacity was freed
+                    placement = self._preempt_admit_locked(w.task)
+                if placement is None:
+                    if not dominated and len(pfailed) < self._DRAIN_MEMO:
+                        pfailed.append((w.task.resources, tprio, tdl))
+                else:
+                    # a committed eviction changes resident state (and can
+                    # free net capacity beyond what the preemptor took, e.g.
+                    # a whole-gang victim): the memos AND the freed-capacity
+                    # hint are stale — reset them so the rest of the pass
+                    # probes against reality (the hint's soundness premise,
+                    # "only the freed device improved", no longer holds)
+                    failed.clear()
+                    pfailed.clear()
+                    freed = None
             if placement is None:
-                if len(failed) < self._DRAIN_MEMO:
-                    failed.append(res)
                 still.append(w)
             else:
                 self._admit_cbs[w.task.uid] = w.callback
                 fired.append((w, placement,
                               self._epochs.get(w.task.uid, 0)))
-        self._waiters = still
+        if self._waiters:
+            # preemption victims were re-enqueued mid-scan: merge survivors in
+            for w in still:
+                bisect.insort(self._waiters, w, key=lambda x: x.key)
+        else:
+            self._waiters = still
         return fired
 
-    @staticmethod
-    def _fire(fired: Sequence[Tuple[_Waiter, Any, int]]) -> None:
+    def _fire_deferred(self) -> None:
+        """Deliver buffered out-of-band notifications (preemption notices)
+        outside the lock, before any admission callback queued after them —
+        a backend always learns a task was evicted before it sees the
+        re-admission."""
+        with self._lock:
+            pending, self._deferred = self._deferred, []
+        for fn in pending:
+            fn()
+
+    def _fire(self, fired: Sequence[Tuple[_Waiter, Any, int]]) -> None:
+        self._fire_deferred()
         for w, placement, epoch in fired:
             w.callback(w.task, placement, epoch)
 
@@ -385,6 +487,7 @@ class WaiterQueueMixin:
             if self.can_ever_fit(w.task):
                 still.append(w)
             else:
+                self._forget_task_locked(w.task)
                 failed.append((w, None, self._epochs.get(w.task.uid, 0)))
         self._waiters = still
         return failed

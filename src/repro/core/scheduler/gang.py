@@ -170,12 +170,21 @@ class GangScheduler(WaiterQueueMixin):
     # -- admission / release --------------------------------------------------
     def _admit_locked(self, task: Task) -> Optional[GangReservation]:
         self.begin_attempts += 1
-        r = task.resources
-        k = max(r.chips, 1)
         group = self._find_group(task)
         if group is None:
             return None
-        per_chip = r.hbm_bytes // k
+        self._reserve_group_locked(task, group)
+        self.placements.append((task.uid, group.lead))
+        return group
+
+    def _reserve_group_locked(self, task: Task,
+                              group: GangReservation) -> None:
+        """Apply the reservation bookkeeping for a KNOWN group: per-chip
+        memory/slot charges, link charges, the bound map. Shared by
+        admission and by the preemption layer's exact rollback (restoring a
+        trial-evicted victim to the group it held)."""
+        r = task.resources
+        per_chip = r.hbm_bytes // max(r.chips, 1)
         need = slots_needed(task)
         for cell in group.cells():
             d = self.topo.cells[cell]
@@ -187,8 +196,6 @@ class GangScheduler(WaiterQueueMixin):
         self.topo.reserve_links(task.uid, group, r)
         self.bound[task.uid] = group
         task.device = group.lead
-        self.placements.append((task.uid, group.lead))
-        return group
 
     def _release_locked(self, task: Task) -> Optional[GangReservation]:
         group = self.bound.pop(task.uid, None)

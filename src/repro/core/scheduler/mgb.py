@@ -11,6 +11,11 @@ devices pick the one with the least aggregate in-use core demand (the paper's
 "fewest in-use warps"). Optimistic: it will oversubscribe compute to exploit
 fast completions, which §V-B shows wins ~1.21x throughput over Alg. 2 at the
 cost of <1% extra kernel slowdown.
+
+Both policies are admission-only; their preemptive upgrades (evict running
+lower-ranked work for an urgent arrival) live in ``scheduler.preempt`` as
+``PreemptiveAlg2Scheduler`` / ``PreemptiveAlg3Scheduler`` — same
+``device_feasible`` predicates, reused verbatim by the victim planner.
 """
 from __future__ import annotations
 

@@ -15,7 +15,13 @@ over the scheduler's link ledger).
 
 Admission goes through the scheduler's OWN waiter queue — the same
 priority/deadline-ordered wakeup path the live executor uses — so simulated
-and live submissions of one trace produce the same admission order.
+and live submissions of one trace produce the same admission order. Under a
+preemptive scheduler (``repro.core.scheduler.preempt``) that extends to
+EVICTION order: the scheduler's preemption notices interrupt the victim's
+virtual-clock run, its exact remaining work is banked in the progress
+ledger, and the resumed attempt (possibly on a different device — that is
+migration) runs for remaining + checkpoint penalty instead of from scratch,
+so preempted work is conserved.
 
 Crash semantics (paper Table II): a memory-oblivious scheduler (CG) may admit
 a task whose footprint exceeds the device's free HBM — the job then dies with
@@ -28,6 +34,8 @@ and is the engine behind benchmarks/fig4, fig5, table2, table3, table4, fig6.
 from __future__ import annotations
 
 import dataclasses
+import time
+import weakref
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import interference
@@ -52,6 +60,10 @@ class SimResult:
     utilization: float             # mean busy fraction over makespan
     cancelled: int = 0             # jobs ended by JobHandle.cancel()
     shed: int = 0                  # parked jobs failed past their deadline
+    # True iff drain() hit its time_limit with work still pending — a capped
+    # run must not masquerade as a completed one (callers check this instead
+    # of trusting `completed`)
+    truncated: bool = False
 
     @property
     def mean_turnaround(self) -> float:
@@ -105,6 +117,11 @@ class Simulator:
                  poll_interval: float = 0.05, crash_delay: float = 8.0):
         self.sched = scheduler
         self.workers = workers
+        # preemptive scheduler: observe evictions so the victim's in-flight
+        # virtual run is stopped and its EXACT remaining work banked (the
+        # scheduler's own estimate is residency-based and ignores dilation)
+        if hasattr(scheduler, "add_preempt_listener"):
+            scheduler.add_preempt_listener(self._on_preempt)
         self.poll = poll_interval  # retry cadence when no device is feasible
         # a job that dies of OOM still burned startup time (process launch,
         # data load) before the failed alloc — without this, crash cascades
@@ -118,15 +135,22 @@ class Simulator:
         arrival users call it to reuse the object across traces)."""
         self.now = 0.0
         # deadline shedding (if the scheduler opts in) must judge "now" on
-        # the VIRTUAL clock the deadlines were stamped with
-        self.sched._clock = lambda: self.now
+        # the VIRTUAL clock the deadlines were stamped with. Bound weakly:
+        # a scheduler that outlives this simulator must not pin it (and its
+        # records) in memory through the clock closure
+        ref = weakref.ref(self)
+        self.sched._clock = \
+            lambda: s.now if (s := ref()) is not None else time.monotonic()
         self.records: List[ExecRecord] = []
         self._queue: List[_JobState] = []   # jobs waiting for a sim worker
         # admissions fired by the scheduler's waiter queue (the SAME wakeup
         # path the live executor uses, so sim and executor agree on placement
-        # sequence): callbacks append here, _try_start drains
-        self._admitted_buf: List[Tuple[_JobState, Task, Optional[int]]] = []
+        # sequence): callbacks append here with their admission epoch,
+        # _try_start drains and drops entries a later eviction superseded
+        self._admitted_buf: List[
+            Tuple[_JobState, Task, Optional[int], int]] = []
         self._blocked: Dict[int, _JobState] = {}  # task uid -> parked job
+        self._jobs_by_task: Dict[int, _JobState] = {}  # uid -> owning job
         self._running: Dict[int, _Running] = {}   # task uid -> running record
         self._idle_workers = self.workers
         self._busy: List[float] = [0.0] * len(self.sched.devices)
@@ -141,6 +165,7 @@ class Simulator:
         self._crashing: List[Tuple[float, _JobState]] = []  # (free time, job)
         self._turnaround: Dict[str, float] = {}
         self._failure_pending: Optional[Tuple[float, int]] = None
+        self._truncated = False
 
     # -- open-arrival API ----------------------------------------------------
     def submit(self, job: Job, *, priority: Optional[int] = None,
@@ -295,11 +320,18 @@ class Simulator:
         """Barrier: advance the clock until every submitted job resolved
         (or ``time_limit`` virtual seconds passed); returns the result so
         far. Parked waiters that can never start are crashed, mirroring the
-        closed-batch protocol."""
+        closed-batch protocol. Hitting the limit with work still pending
+        marks the result ``truncated`` — capped runs must not masquerade as
+        completed ones, so callers check the flag (Cluster.drain raises).
+        Stepping is bounded, so the clock never overshoots the limit; the
+        flag describes THIS drain (a later uncapped drain that finishes the
+        work reports truncated=False)."""
+        self._truncated = False
         while self.pending():
-            if self.now > time_limit:
+            if self.now >= time_limit:
+                self._truncated = True
                 break
-            if not self.step():
+            if not self.step(limit=time_limit):
                 break
         return self.result()
 
@@ -318,7 +350,8 @@ class Simulator:
             slowdowns=dict(self._slowdowns),
             dilations=dict(self._dilations),
             device_busy=list(self._busy), utilization=util,
-            cancelled=self._cancelled, shed=self._shed)
+            cancelled=self._cancelled, shed=self._shed,
+            truncated=self._truncated)
 
     # -- compatibility wrapper ------------------------------------------------
     def run(self, jobs: Sequence[Job], *, time_limit: float = 1e7,
@@ -381,12 +414,32 @@ class Simulator:
             self._finish_job(js, crashed_job=True)
             return
         self._blocked[task.uid] = js
+        self._jobs_by_task[task.uid] = js
 
         def cb(t: Task, placement: Optional[int], epoch: int,
                js=js) -> None:
-            self._admitted_buf.append((js, t, placement))
+            self._admitted_buf.append((js, t, placement, epoch))
 
         self.sched.admit_or_enqueue(task, cb)
+
+    def _on_preempt(self, victims: Sequence[Tuple[Task, int]]) -> None:
+        """Preemption notice from the scheduler: stop the victims' virtual
+        runs, bank their EXACT remaining work (overwriting the scheduler's
+        residency-based estimate), and re-park their jobs — the banked value
+        is what the resumed attempt starts from, so no completed virtual
+        work is ever re-run. (The notice's superseded-epoch tag matters only
+        to the multi-threaded live backend; the sim is single-threaded, so
+        delivery is always timely.)"""
+        for t, _epoch in victims:
+            rec = self._running.pop(t.uid, None)
+            if rec is not None:
+                self.sched.ledger.set_remaining(t.uid, max(rec.remaining, 0.0))
+            # evicted while still in the admission buffer: the stale entry is
+            # dropped by _try_start's epoch check; either way the job is
+            # parked again until the re-admission callback fires
+            js = rec.job if rec is not None else self._jobs_by_task.get(t.uid)
+            if js is not None and not js.done:
+                self._blocked[t.uid] = js
 
     def _try_start(self) -> None:
         # workers pick jobs from the queue while any are idle
@@ -396,7 +449,14 @@ class Simulator:
             self._submit_task(js)
         # drain admissions (task_end inside this loop can fire more)
         while self._admitted_buf:
-            js, task, placement = self._admitted_buf.pop(0)
+            js, task, placement, epoch = self._admitted_buf.pop(0)
+            if placement is not None and placement is not DEADLINE_SHED \
+                    and self.sched.admission_epoch(task) != epoch:
+                # superseded between admission and start (preempted or
+                # mark_dead-evicted while buffered): the resources were
+                # already released and the task re-enqueued — the fresh
+                # incarnation's callback owns it now
+                continue
             self._blocked.pop(task.uid, None)
             if js.cancel_requested and placement is not None \
                     and placement is not DEADLINE_SHED:
@@ -434,12 +494,28 @@ class Simulator:
             task.start_t = self.now
             js.started = True
             self._started_at[task.uid] = self.now
-            self._solo[task.uid] = task.resources.est_seconds
-            self._running[task.uid] = _Running(
-                task, js, task.resources.est_seconds, devs)
+            work = task.resources.est_seconds
+            ledger = getattr(self.sched, "ledger", None)
+            if ledger is not None:
+                banked = ledger.remaining_or_none(task.uid)
+                if banked is not None:
+                    # work-conserving resume after preemption: remaining
+                    # work plus the checkpoint/restore penalty, not a
+                    # from-scratch restart — migration (a different device
+                    # group than last time) costs the same penalty
+                    work = banked + \
+                        self.sched.preempt_policy.checkpoint_penalty_s
+            self._solo[task.uid] = work
+            self._running[task.uid] = _Running(task, js, work, devs)
+
+    def _drop_job_maps(self, js: _JobState) -> None:
+        # a resolved job's task entries are dead weight (uids never recur)
+        for t in js.job.tasks:
+            self._jobs_by_task.pop(t.uid, None)
 
     def _finish_job(self, js: _JobState, crashed_job: bool = False) -> None:
         js.done = True
+        self._drop_job_maps(js)
         if crashed_job:
             self._crashed += 1
         else:
@@ -451,6 +527,7 @@ class Simulator:
 
     def _end_cancelled(self, js: _JobState, *, held_worker: bool) -> None:
         js.done = True
+        self._drop_job_maps(js)
         js.cancelled = True
         js.job.finish_t = self.now
         self._cancelled += 1
@@ -460,6 +537,7 @@ class Simulator:
     def _end_shed(self, js: _JobState) -> None:
         # a shed waiter was parked (holding a sim worker) but never admitted
         js.done = True
+        self._drop_job_maps(js)
         js.shed = True
         js.job.finish_t = self.now
         self._shed += 1
@@ -494,7 +572,14 @@ class Simulator:
         done = [uid for uid, r in self._running.items()
                 if r.remaining <= 1e-9]
         for uid in done:
-            rec = self._running.pop(uid)
+            # the FIRST completion's task_end re-drives admission, which can
+            # preempt a co-completing resident before ITS task_end runs —
+            # the eviction notice already removed it from _running and
+            # re-parked it (it resumes for its ~zero banked remainder plus
+            # the restore penalty), so it is simply no longer ours to end
+            rec = self._running.pop(uid, None)
+            if rec is None:
+                continue
             self.sched.task_end(rec.task)
             rec.task.finish_t = self.now
             dur = self.now - self._started_at[uid]

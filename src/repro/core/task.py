@@ -81,6 +81,16 @@ class Task:
     # so a trace can be grouped by gang end to end. None for solo tasks
     # (the executor backfills the job's gang_id at submit).
     gang_id: Optional[str] = None
+    # preemption bookkeeping: times this task was evicted by the preemptive
+    # scheduler layer, counted against PreemptionPolicy.budget (a task at
+    # budget is immune to further eviction). Each eviction also adds
+    # aging_step to age_boost — an ADMISSION-rank bonus (the waiter queue
+    # ranks by priority + age_boost) so a repeatedly-bumped job eventually
+    # outranks the arrivals displacing it. Deliberately NOT folded into
+    # `priority`: the eviction decision rule compares raw priorities, and an
+    # aged victim must never start preempting its own original class.
+    preempt_count: int = 0
+    age_boost: int = 0
     # runtime bookkeeping (filled by scheduler/executor)
     device: Optional[int] = None
     arrival_t: float = 0.0

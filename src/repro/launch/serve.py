@@ -25,7 +25,7 @@ from repro.configs.registry import ARCHS, get_arch
 from repro.core.cluster import Cluster, JobStatus
 from repro.core.executor import ExecJob
 from repro.core.probe import probe_fn
-from repro.core.scheduler import MGBAlg3Scheduler
+from repro.core.scheduler import MGBAlg3Scheduler, PreemptiveAlg3Scheduler
 from repro.core.task import Job, Task, UnitTask
 from repro.models.model import init_params
 from repro.serve.decode import greedy_generate, make_prefill_step
@@ -34,11 +34,16 @@ from repro.serve.decode import greedy_generate, make_prefill_step
 def serve(arch: str, *, requests: int = 16, batch: int = 4,
           prompt_len: int = 64, gen_len: int = 32, seed: int = 0,
           num_devices: int = 2, workers: int = 0,
-          deadline_s: float = 5.0, shed_late: bool = False) -> dict:
+          deadline_s: float = 5.0, shed_late: bool = False,
+          preempt: bool = False) -> dict:
     cfg = get_arch(arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(seed))
     prefill = jax.jit(make_prefill_step(cfg, attn_impl="flash_jnp"))
-    sched = MGBAlg3Scheduler(num_devices)
+    # preempt turns the deadline into the ENFORCEMENT half shedding cannot
+    # give: an arriving earlier-deadline request may evict a resident one
+    # (same priority class, EDF outranking) instead of waiting behind it
+    sched = (PreemptiveAlg3Scheduler(num_devices) if preempt
+             else MGBAlg3Scheduler(num_devices))
 
     rng = np.random.default_rng(seed)
     n_batches = (requests + batch - 1) // batch
@@ -56,7 +61,7 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
     # enforcement: a request still parked when its deadline passes is failed
     # with JobStatus.SHED at the next drain instead of served late
     cluster = Cluster(sched, workers=workers or num_devices,
-                      shed_late=shed_late)
+                      shed_late=shed_late, preempt=preempt or None)
     handles = []
     t0 = time.time()
     # open arrival: each request batch is submitted as it "comes in", with
@@ -104,7 +109,10 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
             "mean_batch_latency_s": float(np.mean(lat)) if lat else 0.0,
             "completed": stats["completed"], "crashed": stats["crashed"],
             "deadlines_met": len(met),
+            "deadline_met_rate": len(met) / max(n_batches, 1),
             "shed": len(shed),
+            "preemptions": stats["preemptions"],
+            "migrations": stats["migrations"],
             "sched_attempts": stats["sched_attempts"],
             "placements": sched.placements}
 
@@ -124,16 +132,24 @@ def main():
     ap.add_argument("--shed-late", action="store_true",
                     help="fail requests still parked past their deadline "
                          "(JobStatus.SHED) instead of serving them late")
+    ap.add_argument("--preempt", action="store_true",
+                    help="preemptive EDF: an arriving earlier-deadline "
+                         "request may evict a resident one (checkpoint-"
+                         "based, work-conserving) instead of queueing "
+                         "behind it")
     args = ap.parse_args()
     res = serve(args.arch, requests=args.requests, batch=args.batch,
                 prompt_len=args.prompt_len, gen_len=args.gen_len,
                 num_devices=args.num_devices, workers=args.workers,
-                deadline_s=args.deadline_s, shed_late=args.shed_late)
+                deadline_s=args.deadline_s, shed_late=args.shed_late,
+                preempt=args.preempt)
     print(f"[serve] {res['tokens_generated']} tokens in {res['wall_s']:.1f}s "
           f"({res['tokens_per_s']:.1f} tok/s, "
           f"batch latency {res['mean_batch_latency_s'] * 1e3:.0f} ms, "
-          f"{res['deadlines_met']}/{res['batches']} deadlines met, "
-          f"{res['shed']} shed, "
+          f"{res['deadlines_met']}/{res['batches']} deadlines met "
+          f"({100 * res['deadline_met_rate']:.0f}%), "
+          f"{res['shed']} shed, {res['preemptions']} preemption(s), "
+          f"{res['migrations']} migration(s), "
           f"{res['sched_attempts']} admission attempts)")
 
 
