@@ -1,0 +1,574 @@
+"""Scheduler control-plane scale benchmark: indexed admission vs the
+pre-refactor engines, at fleet depth.
+
+Three measurements, one per layer of the fleet-scale refactor:
+
+  1. **flat admission churn** — MGB Alg. 3 over the indexed waiter queue
+     (``_WaiterIndex``) vs the verbatim pre-refactor sorted-list engine
+     (``ReferenceAlg3Scheduler``), at queue depths 1e2 -> 1e5. Protocol:
+     fill every device with a resident, park ``depth`` waiters, then drive
+     ``task_end`` churn — each completion frees exactly one waiter's worth
+     of capacity, so admissions/sec isolates the drain cost. The reference
+     engine re-scans the whole queue per wakeup (O(depth) per admission);
+     deep runs are TIME-CAPPED and report the rate over the measured
+     window (the queue shrinks negligibly within the cap, so the partial
+     rate is the rate at that depth);
+  2. **gang placement probe** — ``GangScheduler._find_group`` against the
+     topology's incremental tile index vs a bench-local copy of the
+     historical full enumeration (per-candidate member walks + resident
+     demand sums), on fleets of 1k -> 10k chips, all tiles resident (the
+     alg3 scoring worst case). Both probes must pick the SAME group;
+  3. **sharded control plane** — single-chip admission churn on one global
+     ``GangScheduler`` vs ``ShardedScheduler`` (one engine per pod): the
+     global drain re-scans a fleet-sized shape index per admission, the
+     sharded drain touches only the owner pod's 256 positions, and idle
+     pods pull backlog over the stealing path.
+
+    PYTHONPATH=src python -m benchmarks.bench_sched_scale            # full
+    PYTHONPATH=src python -m benchmarks.bench_sched_scale --smoke    # CI
+
+``--smoke`` additionally enforces the REGRESSION GUARD: flat indexed
+admissions/sec at depth 1e4 must stay within ``guard_factor`` (2x) of the
+committed baseline in ``benchmarks/baselines/sched_scale.json`` — a queue
+or drain regression fails CI instead of landing silently.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from collections import deque
+from statistics import median
+from typing import Any, Dict, List, Optional, Tuple
+
+from benchmarks.common import save_json
+from repro.core.scheduler import (
+    GangScheduler, MGBAlg3Scheduler, ReferenceAlg3Scheduler,
+    ShardedScheduler,
+)
+from repro.core.scheduler.base import slots_needed
+from repro.core.task import ResourceVector, Task, UnitTask
+
+GB = 1024**3
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baselines",
+                             "sched_scale.json")
+
+# flat sweep scenario: 64 devices, one 16 GB resident each, homogeneous
+# 16 GB waiters — every task_end admits exactly one waiter
+FLAT_DEVICES = 64
+FLAT_DEPTHS = (100, 1_000, 10_000, 100_000)
+# gang fleet sweep: pods x 16x16 chips (256/pod), 16-chip (4x4) gangs
+FLEET_PODS = (4, 16, 40)          # 1_024 / 4_096 / 10_240 chips
+
+
+def mk_task(name: str, mem_gb: float = 16.0, chips: int = 1,
+            prio: int = 0, deadline: Optional[float] = None,
+            demand: float = 0.5) -> Task:
+    vec = ResourceVector(hbm_bytes=int(mem_gb * GB), flops=1e12,
+                         bytes_accessed=1e9, est_seconds=10.0,
+                         core_demand=demand, bw_demand=demand, chips=chips)
+    t = Task(units=[UnitTask(fn=None, memobjs=frozenset({name}),
+                             resources=vec, name=name)], name=name)
+    t.priority = prio
+    t.deadline_t = deadline
+    return t
+
+
+# ---------------------------------------------------------------------------
+# 1) flat admission churn: indexed queue vs sorted-list reference
+# ---------------------------------------------------------------------------
+
+def flat_churn(engine: str, depth: int, *, budget_s: float,
+               mixed: bool = False, n_dev: int = FLAT_DEVICES,
+               order_log: Optional[List[str]] = None) -> Dict[str, Any]:
+    """One churn run; returns the metrics row. ``mixed`` stamps 4 priority
+    classes and EDF deadlines on a third of the waiters (exercises the
+    class/deadline index paths); ``order_log`` collects the admission
+    sequence for cross-engine parity checks."""
+    cls = {"indexed": MGBAlg3Scheduler,
+           "reference": ReferenceAlg3Scheduler}[engine]
+    sched = cls(n_dev)
+    hogs = [mk_task(f"hog{i}") for i in range(n_dev)]
+    for h in hogs:
+        assert sched.task_begin(h) is not None
+    admitted: deque = deque()
+
+    def cb(t: Task, placement, epoch: int) -> None:
+        admitted.append(t)
+
+    base_t = time.monotonic() + 1e6   # far-future deadlines: EDF order only
+    t0 = time.perf_counter()
+    for i in range(depth):
+        prio = (i % 4) if mixed else 0
+        dl = (base_t + i) if (mixed and i % 3 == 0) else None
+        sched.admit_or_enqueue(mk_task(f"w{i}", prio=prio, deadline=dl), cb)
+    enqueue_s = time.perf_counter() - t0
+    assert sched.waiting_count() == depth
+
+    current: deque = deque(hogs)
+    lats: List[float] = []
+    n_adm = 0
+    t0 = time.perf_counter()
+    while current and n_adm < depth:
+        if time.perf_counter() - t0 > budget_s:
+            break
+        vic = current.popleft()
+        t1 = time.perf_counter()
+        sched.task_end(vic)
+        lats.append(time.perf_counter() - t1)
+        while admitted:
+            w = admitted.popleft()
+            if order_log is not None:
+                order_log.append(w.name)
+            current.append(w)
+            n_adm += 1
+    elapsed = max(time.perf_counter() - t0, 1e-9)
+    return {
+        "bench": "flat", "engine": engine, "depth": depth,
+        "mixed": mixed,
+        "enqueue_per_s": depth / max(enqueue_s, 1e-9),
+        "admissions_per_s": n_adm / elapsed,
+        "drain_p50_us": 1e6 * median(lats) if lats else 0.0,
+        "admitted": n_adm,
+        "capped": n_adm < depth,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2) gang placement probe: tile index vs historical enumeration
+# ---------------------------------------------------------------------------
+
+def legacy_find_group(sched: GangScheduler, task: Task):
+    """The pre-refactor ``_find_group``, verbatim: full candidate
+    enumeration with per-member feasibility walks and per-candidate
+    resident demand sums (the benchmark foil — O(tiles x tile size) per
+    probe, against the index's O(tiles))."""
+    r = task.resources
+    k = max(r.chips, 1)
+    per_chip = r.hbm_bytes // k
+    need = slots_needed(task)
+    best = None
+    best_key: Tuple[float, float] = (float("inf"), float("inf"))
+    for group in sched.topo.candidate_groups(k):
+        if not all(sched._member_ok(c, per_chip, need)
+                   for c in group.cells()):
+            continue
+        if sched.policy == "alg2" \
+                and not sched.topo.link_headroom_ok(group, r):
+            continue
+        key = (sum(sched.topo.cells[c].in_use_demand
+                   for c in group.cells()),
+               sched.topo.max_link_load(group))
+        if key < best_key:
+            best, best_key = group, key
+        if key == (0.0, 0.0):
+            return group
+    return best
+
+
+def _fill_tiles(sched: GangScheduler, *, sr: int, sc: int,
+                mem_gb_per_chip: float, demand: float) -> List[Task]:
+    """Reserve every aligned (sr x sc) tile directly (the public admission
+    path would pay a position scan per fill — quadratic setup the benchmark
+    is not measuring). The reserve path keeps the tile index exact."""
+    topo = sched.topo
+    chips = sr * sc
+    out: List[Task] = []
+    for p in range(topo.pods):
+        for r0 in range(0, topo.rows - sr + 1, sr):
+            for c0 in range(0, topo.cols - sc + 1, sc):
+                t = mk_task(f"res{p}.{r0}.{c0}",
+                            mem_gb=mem_gb_per_chip * chips, chips=chips,
+                            demand=demand)
+                group = topo.tile_group(sr, sc, (p, r0, c0))
+                with sched._lock:
+                    sched._reserve_group_locked(t, group)
+                out.append(t)
+    return out
+
+
+def _probe_rate(fn, *, budget_s: float) -> Tuple[float, Any]:
+    """(probes/sec, last result) over a time-boxed repeat loop."""
+    n = 0
+    last = None
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < budget_s or n == 0:
+        last = fn()
+        n += 1
+    return n / (time.perf_counter() - t0), last
+
+
+def gang_probe(pods: int, *, budget_s: float, rows: int = 16,
+               cols: int = 16, sr: int = 4, sc: int = 4) -> Dict[str, Any]:
+    """Placement probe latency on an all-resident fleet (every tile
+    feasible, so the alg3 scoring path walks/aggregates ALL of them — the
+    worst case for both probes). Asserts both pick the identical group."""
+    sched = GangScheduler(pods=pods, rows=rows, cols=cols)
+    chips = sr * sc
+    # 4 GB/chip residents: a 4 GB/chip probe fits everywhere, nothing free
+    _fill_tiles(sched, sr=sr, sc=sc, mem_gb_per_chip=4.0, demand=0.3)
+    probe = mk_task("probe", mem_gb=4.0 * chips, chips=chips, demand=0.3)
+    sched._find_group(probe)  # warm: builds the shape indexes once
+    idx_rate, g_idx = _probe_rate(lambda: sched._find_group(probe),
+                                  budget_s=budget_s)
+    leg_rate, g_leg = _probe_rate(lambda: legacy_find_group(sched, probe),
+                                  budget_s=budget_s)
+    assert g_idx is not None and g_leg is not None
+    assert g_idx.lead == g_leg.lead, (g_idx, g_leg)  # identical pick
+    return {
+        "bench": "gang_probe", "chips": pods * rows * cols,
+        "gang_chips": chips,
+        "indexed_probes_per_s": idx_rate,
+        "legacy_probes_per_s": leg_rate,
+        "speedup": idx_rate / max(leg_rate, 1e-9),
+    }
+
+
+class LegacyProbeGangScheduler(GangScheduler):
+    """GangScheduler whose placement probe is the historical enumeration —
+    the end-to-end churn foil (everything else identical)."""
+
+    def _find_group(self, task: Task):
+        return legacy_find_group(self, task)
+
+
+def gang_churn(pods: int, *, engine: str, budget_s: float,
+               waiters: int = 256, rows: int = 16, cols: int = 16,
+               sr: int = 4, sc: int = 4) -> Dict[str, Any]:
+    """End-to-end gang admission churn on an exactly-full fleet: each
+    ``task_end`` frees one tile and admits exactly one parked gang."""
+    cls = {"indexed": GangScheduler,
+           "legacy": LegacyProbeGangScheduler}[engine]
+    sched = cls(pods=pods, rows=rows, cols=cols)
+    chips = sr * sc
+    hogs = _fill_tiles(sched, sr=sr, sc=sc, mem_gb_per_chip=16.0,
+                       demand=0.5)
+    admitted: deque = deque()
+
+    def cb(t: Task, placement, epoch: int) -> None:
+        admitted.append(t)
+
+    for i in range(waiters):
+        sched.admit_or_enqueue(
+            mk_task(f"g{i}", mem_gb=16.0 * chips, chips=chips), cb)
+    current: deque = deque(hogs)
+    n_adm = 0
+    lats: List[float] = []
+    t0 = time.perf_counter()
+    while current and n_adm < waiters:
+        if time.perf_counter() - t0 > budget_s:
+            break
+        vic = current.popleft()
+        t1 = time.perf_counter()
+        sched.task_end(vic)
+        lats.append(time.perf_counter() - t1)
+        while admitted:
+            current.append(admitted.popleft())
+            n_adm += 1
+    elapsed = max(time.perf_counter() - t0, 1e-9)
+    return {
+        "bench": "gang_churn", "engine": engine,
+        "chips": pods * rows * cols, "gang_chips": chips,
+        "admissions_per_s": n_adm / elapsed,
+        "drain_p50_us": 1e6 * median(lats) if lats else 0.0,
+        "admitted": n_adm, "capped": n_adm < waiters,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3) sharded control plane vs one global engine
+# ---------------------------------------------------------------------------
+
+def _fill_cells(sched: GangScheduler, *, per_cell: int = 2,
+                mem_gb: float = 8.0) -> List[Task]:
+    """``per_cell`` co-resident tasks on every chip, reserved directly
+    (same rationale as _fill_tiles). Two 8 GB residents per 16 GB chip
+    means ending ONE leaves the cell busy-but-feasible — the drain cannot
+    shortcut through the free-tile heap and pays the real position scan,
+    which is the fleet-size-dependent cost this section measures."""
+    topo = sched.topo
+    out: List[Task] = []
+    for p in range(topo.pods):
+        for r0 in range(topo.rows):
+            for c0 in range(topo.cols):
+                for j in range(per_cell):
+                    t = mk_task(f"res{p}.{r0}.{c0}.{j}", mem_gb=mem_gb,
+                                demand=0.25)
+                    group = topo.tile_group(1, 1, (p, r0, c0))
+                    with sched._lock:
+                        sched._reserve_group_locked(t, group)
+                    out.append(t)
+    return out
+
+
+def _fill_cells_sharded(sched: ShardedScheduler) -> List[Task]:
+    # direct per-shard fill (+ owner registration, normally done by the
+    # admission path) — same rationale as _fill_tiles: the setup's position
+    # scans are not what this benchmark measures
+    out: List[Task] = []
+    for si, sh in enumerate(sched.shards):
+        ts = _fill_cells(sh)
+        for t in ts:
+            sched._owner[t.uid] = si
+        out.extend(ts)
+    return out
+
+
+def _interleave_by_pod(tasks: List[Task], pods: int) -> List[Task]:
+    """Round-robin the completion order across pods — the open-arrival
+    steady state (completions land fleet-wide, not pod-by-pod), which keeps
+    the sharded drain on the owner pod instead of forcing a steal per
+    admission."""
+    per_pod: List[List[Task]] = [[] for _ in range(pods)]
+    for i, t in enumerate(tasks):
+        per_pod[(i * pods) // len(tasks)].append(t)
+    out: List[Task] = []
+    for j in range(max(len(g) for g in per_pod)):
+        for g in per_pod:
+            if j < len(g):
+                out.append(g[j])
+    return out
+
+
+def sharded_churn(pods: int, *, engine: str, budget_s: float,
+                  waiters: int = 512, rows: int = 16,
+                  cols: int = 16) -> Dict[str, Any]:
+    """Single-chip admission churn at fleet size: global engine (one lock,
+    fleet-sized position scan per drain — every cell is busy-but-feasible,
+    so no free-tile shortcut) vs per-pod shards (the owner pod's 256
+    positions per drain, work stealing for imbalance). Completions arrive
+    interleaved across pods, the open-arrival steady state."""
+    if engine == "global":
+        sched: Any = GangScheduler(pods=pods, rows=rows, cols=cols)
+        hogs = _fill_cells(sched)
+    else:
+        sched = ShardedScheduler(pods=pods, rows=rows, cols=cols)
+        hogs = _fill_cells_sharded(sched)
+    hogs = _interleave_by_pod(hogs, pods)
+    admitted: deque = deque()
+
+    def cb(t: Task, placement, epoch: int) -> None:
+        admitted.append(t)
+
+    t0 = time.perf_counter()
+    for i in range(waiters):
+        sched.admit_or_enqueue(mk_task(f"w{i}", mem_gb=8.0, demand=0.25),
+                               cb)
+    enqueue_s = time.perf_counter() - t0
+    current: deque = deque(hogs)
+    n_adm = 0
+    t0 = time.perf_counter()
+    while current and n_adm < waiters:
+        if time.perf_counter() - t0 > budget_s:
+            break
+        vic = current.popleft()
+        sched.task_end(vic)
+        while admitted:
+            current.append(admitted.popleft())
+            n_adm += 1
+    elapsed = max(time.perf_counter() - t0, 1e-9)
+    row = {
+        "bench": "sharded_churn", "engine": engine,
+        "chips": pods * rows * cols,
+        "enqueue_per_s": waiters / max(enqueue_s, 1e-9),
+        "admissions_per_s": n_adm / elapsed,
+        "admitted": n_adm, "capped": n_adm < waiters,
+    }
+    if engine == "sharded":
+        row["steals"] = sched.steals
+    return row
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def _fmt(row: Dict[str, Any]) -> str:
+    if row["bench"] == "flat":
+        cap = " (capped)" if row["capped"] else ""
+        mix = " mixed" if row["mixed"] else ""
+        return (f"flat{mix} {row['engine']:>9} depth={row['depth']:>6}: "
+                f"{row['admissions_per_s']:>10.0f} adm/s  "
+                f"drain p50={row['drain_p50_us']:8.1f}us  "
+                f"enq={row['enqueue_per_s']:.0f}/s{cap}")
+    if row["bench"] == "gang_probe":
+        return (f"gang probe  {row['chips']:>6} chips: indexed "
+                f"{row['indexed_probes_per_s']:>8.0f}/s vs legacy "
+                f"{row['legacy_probes_per_s']:>7.0f}/s "
+                f"({row['speedup']:.1f}x)")
+    if row["bench"] == "gang_churn":
+        cap = " (capped)" if row["capped"] else ""
+        return (f"gang churn {row['engine']:>8} {row['chips']:>6} chips: "
+                f"{row['admissions_per_s']:>8.0f} adm/s  "
+                f"p50={row['drain_p50_us']:8.1f}us{cap}")
+    cap = " (capped)" if row["capped"] else ""
+    extra = f" steals={row['steals']}" if "steals" in row else ""
+    return (f"sharded churn {row['engine']:>7} {row['chips']:>6} chips: "
+            f"{row['admissions_per_s']:>8.0f} adm/s  "
+            f"enq={row['enqueue_per_s']:.0f}/s{extra}{cap}")
+
+
+def _parity_check(depth: int = 300) -> None:
+    """Both engines must replay an identical mixed-class admission
+    sequence (the full battery lives in tests/test_sched_scale.py; this is
+    the benchmark's own sanity gate)."""
+    seq_i: List[str] = []
+    seq_r: List[str] = []
+    flat_churn("indexed", depth, budget_s=30.0, mixed=True,
+               order_log=seq_i)
+    flat_churn("reference", depth, budget_s=30.0, mixed=True,
+               order_log=seq_r)
+    assert seq_i == seq_r, (
+        f"admission order diverged at "
+        f"{next(i for i, (a, b) in enumerate(zip(seq_i, seq_r)) if a != b)}")
+
+
+def _load_baseline() -> Optional[Dict[str, Any]]:
+    if not os.path.exists(BASELINE_PATH):
+        return None
+    with open(BASELINE_PATH) as f:
+        return json.load(f)
+
+
+def _regression_guard() -> Dict[str, Any]:
+    """The CI guard: flat indexed admissions/sec at the baseline depth must
+    stay within guard_factor of the committed number."""
+    base = _load_baseline()
+    if base is None:
+        raise AssertionError(f"missing committed baseline {BASELINE_PATH}")
+    depth = int(base["depth"])
+    row = flat_churn("indexed", depth, budget_s=60.0)
+    assert not row["capped"], row
+    floor = base["admissions_per_s"] / base["guard_factor"]
+    print(f"guard: depth={depth} measured "
+          f"{row['admissions_per_s']:.0f} adm/s vs committed "
+          f"{base['admissions_per_s']:.0f} (floor {floor:.0f})")
+    assert row["admissions_per_s"] >= floor, (
+        f"admission-rate regression: {row['admissions_per_s']:.0f}/s is "
+        f">{base['guard_factor']}x below the committed baseline "
+        f"{base['admissions_per_s']:.0f}/s at depth {depth} — "
+        f"see {BASELINE_PATH}")
+    return row
+
+
+def run(seed: int = 0, smoke: bool = False,
+        budget_s: float = 8.0) -> List[Dict[str, Any]]:
+    t_start = time.time()
+    rows: List[Dict[str, Any]] = []
+    if smoke:
+        _parity_check(depth=300)
+        for engine in ("indexed", "reference"):
+            rows.append(flat_churn(engine, 2_000, budget_s=budget_s))
+            print(_fmt(rows[-1]))
+        idx, ref = rows[-2], rows[-1]
+        assert idx["admissions_per_s"] > 3 * ref["admissions_per_s"], rows
+        rows.append(gang_probe(2, budget_s=0.3, rows=4, cols=4,
+                               sr=2, sc=2))
+        print(_fmt(rows[-1]))
+        for engine in ("global", "sharded"):
+            rows.append(sharded_churn(2, engine=engine, budget_s=budget_s,
+                                      waiters=64, rows=4, cols=4))
+            print(_fmt(rows[-1]))
+        rows.append(_regression_guard())
+        print("bench_sched_scale --smoke OK "
+              f"({time.time() - t_start:.1f}s)")
+        return rows
+
+    _parity_check(depth=500)
+    by_depth: Dict[int, Dict[str, Dict[str, Any]]] = {}
+    for depth in FLAT_DEPTHS:
+        for engine in ("indexed", "reference"):
+            row = flat_churn(engine, depth, budget_s=budget_s)
+            by_depth.setdefault(depth, {})[engine] = row
+            rows.append(row)
+            print(_fmt(row))
+    # acceptance: >=10x admissions/sec at depth 1e5 on the flat trace
+    deepest = max(FLAT_DEPTHS)
+    speedup = (by_depth[deepest]["indexed"]["admissions_per_s"]
+               / by_depth[deepest]["reference"]["admissions_per_s"])
+    print(f"flat depth={deepest}: indexed is {speedup:.0f}x the "
+          f"pre-refactor engine")
+    assert speedup >= 10.0, by_depth[deepest]
+    # acceptance: sub-linear drain-latency growth 1e2 -> 1e5 (a linear
+    # drain would grow ~1000x; the indexed drain is ~flat + log factors)
+    shallow_p50 = max(by_depth[min(FLAT_DEPTHS)]["indexed"]["drain_p50_us"],
+                      1e-3)
+    deep_p50 = by_depth[deepest]["indexed"]["drain_p50_us"]
+    growth = deep_p50 / shallow_p50
+    print(f"flat indexed drain p50 growth 1e2->1e5: {growth:.1f}x "
+          f"(linear would be ~1000x)")
+    assert growth < 100.0, by_depth
+
+    rows.append(flat_churn("indexed", 10_000, budget_s=budget_s,
+                           mixed=True))
+    print(_fmt(rows[-1]))
+
+    for pods in FLEET_PODS:
+        row = gang_probe(pods, budget_s=min(budget_s / 4, 2.0))
+        rows.append(row)
+        print(_fmt(row))
+        assert row["speedup"] > 1.0, row
+    for pods in (FLEET_PODS[0], FLEET_PODS[-1]):
+        for engine in ("indexed", "legacy"):
+            row = gang_churn(pods, engine=engine, budget_s=budget_s)
+            rows.append(row)
+            print(_fmt(row))
+    for pods in (FLEET_PODS[0], FLEET_PODS[-1]):
+        pair: Dict[str, Dict[str, Any]] = {}
+        for engine in ("global", "sharded"):
+            row = sharded_churn(pods, engine=engine, budget_s=budget_s)
+            pair[engine] = row
+            rows.append(row)
+            print(_fmt(row))
+        print(f"  sharded/global at {pair['global']['chips']} chips: "
+              f"{pair['sharded']['admissions_per_s'] / max(pair['global']['admissions_per_s'], 1e-9):.1f}x")
+        if pods == FLEET_PODS[-1]:
+            # the per-pod control plane must not degrade with fleet size
+            assert (pair["sharded"]["admissions_per_s"]
+                    > pair["global"]["admissions_per_s"]), pair
+
+    save_json("bench_sched_scale.json", rows)
+    print(f"bench_sched_scale done ({time.time() - t_start:.0f}s)")
+    return rows
+
+
+def write_baseline(depth: int = 10_000, guard_factor: float = 2.0) -> None:
+    """Re-measure and commit the smoke guard's baseline (run on the
+    reference machine after intentional scheduler-core changes)."""
+    row = flat_churn("indexed", depth, budget_s=60.0)
+    assert not row["capped"], row
+    os.makedirs(os.path.dirname(BASELINE_PATH), exist_ok=True)
+    payload = {
+        "depth": depth,
+        "admissions_per_s": round(row["admissions_per_s"], 1),
+        "guard_factor": guard_factor,
+        "note": "flat-trace indexed admissions/sec; smoke fails below "
+                "admissions_per_s / guard_factor",
+    }
+    with open(BASELINE_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"baseline written: {payload}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny depths + admission-order parity + the "
+                         "committed-baseline regression guard (CI)")
+    ap.add_argument("--budget", type=float, default=8.0,
+                    help="per-measurement time cap, seconds")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="re-measure and overwrite the smoke guard's "
+                         "committed baseline")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.write_baseline:
+        write_baseline()
+        return
+    run(args.seed, smoke=args.smoke, budget_s=args.budget)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,4 +12,8 @@ from repro.core.scheduler.preempt import (  # noqa: F401
     PreemptionMixin, PreemptiveAlg2Scheduler, PreemptiveAlg3Scheduler,
     PreemptiveGangScheduler,
 )
+from repro.core.scheduler.reference import (  # noqa: F401
+    ReferenceAlg2Scheduler, ReferenceAlg3Scheduler,
+)
+from repro.core.scheduler.sharded import ShardedScheduler  # noqa: F401
 from repro.core.scheduler.slice import SliceScheduler  # noqa: F401

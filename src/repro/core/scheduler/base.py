@@ -32,14 +32,31 @@ Stale completions (a task evicted mid-run whose old incarnation later calls
 a ``task_end(task, epoch=old)`` from the superseded run is a no-op and cannot
 release the re-admitted incarnation's resources.
 
+**Queue representation (fleet scale).** The admission queue is an indexed
+structure (``_WaiterIndex``), not a sorted list: waiters live in per-
+resource-class lazy-deletion heaps keyed by ``_Waiter.key``, alongside a
+deadline min-heap for O(log n) shedding and maintained depth counters so
+stats never scan the queue under the lock. Enqueue/cancel are O(log n) /
+O(1) instead of the old ``bisect.insort`` O(n) memmove, and the
+non-preemptive drain visits *resource classes* rather than waiters: within
+one drain pass feasibility depends only on the resource vector (admissions
+only consume capacity), so one failed probe retires the whole class for the
+pass. This produces the exact admission sequence of the historical sorted-
+list scan (kept verbatim in ``scheduler.reference`` as the test oracle) —
+only the ``begin_attempts`` probe count can differ when more than
+``_DRAIN_MEMO`` distinct vectors fail in a single pass, because the class
+skip is effectively an unbounded memo. Preemption-enabled hosts take the
+full rank-order scan path (eviction invalidates the class-skip premise),
+also against the index.
+
 ``DeviceState`` tracks free HBM and the aggregate core demand ("in-use warps")
 of resident tasks; death marking supports the fault-tolerance tests (a dead
 device is never selected and its residents re-enter the queue).
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
+import heapq
 import math
 import threading
 import time
@@ -127,6 +144,11 @@ class _Waiter:
     deadline_t: Optional[float] = None
     restart: bool = False       # evicted resident re-entering its class front
     seq: int = 0                # arrival order (negative for restarts)
+    # resource vector cached at enqueue: Task.resources REBUILDS the vector
+    # per access for multi-unit tasks, and the index buckets by it
+    vec: Any = None
+    # key cached at enqueue: heap pushes compare it many times
+    sort_key: Tuple[int, int, float, int] = (0, 1, math.inf, 0)
 
     @property
     def key(self) -> Tuple[int, int, float, int]:
@@ -136,6 +158,115 @@ class _Waiter:
         return (-self.priority, 0 if self.restart else 1,
                 self.deadline_t if self.deadline_t is not None else math.inf,
                 self.seq)
+
+
+class _WaiterIndex:
+    """Indexed admission queue: per-resource-class heaps + lazy deletion.
+
+    Waiters are bucketed by their (hashable, frozen) ``ResourceVector`` —
+    feasibility within one drain pass depends only on that vector, so the
+    drain works class-at-a-time. Each bucket is a min-heap of
+    ``(sort_key, waiter)``; ``sort_key`` is globally unique (the seq field
+    breaks every tie), so the waiter itself is never compared. Removal is
+    O(1): drop the uid from ``_live`` and let stale heap entries evaporate
+    when they surface at a bucket head. A parallel deadline min-heap serves
+    expiry shedding without scanning, and depth counters (total, per
+    priority class, per vector class) are maintained on add/discard so the
+    stats paths never walk the queue."""
+
+    __slots__ = ("_buckets", "_live", "_class_depth", "_vec_depth",
+                 "_deadlines", "_dl_seq")
+
+    def __init__(self) -> None:
+        self._buckets: Dict[Any, List[Tuple[tuple, _Waiter]]] = {}
+        self._live: Dict[int, _Waiter] = {}
+        self._class_depth: Dict[int, int] = {}   # priority class -> depth
+        self._vec_depth: Dict[Any, int] = {}     # resource class -> depth
+        self._deadlines: List[Tuple[float, int, _Waiter]] = []
+        self._dl_seq = 0
+
+    def __len__(self) -> int:
+        return len(self._live)
+
+    def add(self, w: _Waiter) -> None:
+        self._live[w.task.uid] = w
+        heapq.heappush(self._buckets.setdefault(w.vec, []), (w.sort_key, w))
+        self._class_depth[w.priority] = \
+            self._class_depth.get(w.priority, 0) + 1
+        self._vec_depth[w.vec] = self._vec_depth.get(w.vec, 0) + 1
+        if w.deadline_t is not None:
+            self._dl_seq += 1
+            heapq.heappush(self._deadlines, (w.deadline_t, self._dl_seq, w))
+
+    def discard(self, uid: int) -> Optional[_Waiter]:
+        """O(1) removal by task uid (heap entries die lazily)."""
+        w = self._live.pop(uid, None)
+        if w is None:
+            return None
+        c = self._class_depth[w.priority] - 1
+        if c:
+            self._class_depth[w.priority] = c
+        else:
+            del self._class_depth[w.priority]
+        v = self._vec_depth[w.vec] - 1
+        if v:
+            self._vec_depth[w.vec] = v
+        else:
+            del self._vec_depth[w.vec]
+        return w
+
+    def get(self, uid: int) -> Optional[_Waiter]:
+        return self._live.get(uid)
+
+    def classes(self) -> List[Any]:
+        """Snapshot of the distinct resource-vector classes currently live."""
+        return list(self._vec_depth.keys())
+
+    def class_size(self, vec: Any) -> int:
+        return self._vec_depth.get(vec, 0)
+
+    def class_depth_snapshot(self) -> Dict[int, int]:
+        return dict(self._class_depth)
+
+    def peek_class(self, vec: Any) -> Optional[Tuple[tuple, _Waiter]]:
+        """Best-ranked live waiter of a class (popping stale entries)."""
+        h = self._buckets.get(vec)
+        if h is None:
+            return None
+        while h:
+            key, w = h[0]
+            if self._live.get(w.task.uid) is w:
+                return key, w
+            heapq.heappop(h)
+        del self._buckets[vec]
+        return None
+
+    def pop_expired(self, now: float) -> List[_Waiter]:
+        """Remove + return every live waiter whose deadline is strictly past
+        (``now > deadline``), best-deadline first. O(shed · log n)."""
+        out: List[_Waiter] = []
+        dl = self._deadlines
+        while dl and dl[0][0] < now:
+            _, _, w = heapq.heappop(dl)
+            if self._live.get(w.task.uid) is w:
+                self.discard(w.task.uid)
+                out.append(w)
+        return out
+
+    def sorted_waiters(self) -> List[_Waiter]:
+        """Rank-ordered snapshot (introspection / the preemptive scan path —
+        NOT the indexed hot path)."""
+        return sorted(self._live.values(), key=lambda w: w.sort_key)
+
+    def take_all_sorted(self) -> List[_Waiter]:
+        """Empty the index, returning the waiters in rank order."""
+        out = self.sorted_waiters()
+        self._buckets.clear()
+        self._live.clear()
+        self._class_depth.clear()
+        self._vec_depth.clear()
+        self._deadlines.clear()
+        return out
 
 
 class WaiterQueueMixin:
@@ -150,8 +281,10 @@ class WaiterQueueMixin:
     """
 
     def _init_waiters(self) -> None:
-        # kept sorted by _Waiter.key; the drain scans it in rank order
-        self._waiters: List[_Waiter] = []
+        # the indexed admission queue (see _WaiterIndex): rank order is
+        # recovered per class via bucket heaps, never by keeping a flat
+        # sorted list
+        self._queue = _WaiterIndex()
         self._seq = 0           # arrival counter (FIFO within a class)
         self._restart_seq = 0   # decreasing: newest restart leads its class
         # preemption (off unless a PreemptionMixin host enables it): when a
@@ -197,9 +330,18 @@ class WaiterQueueMixin:
                     callback,
                     getattr(task, "priority", 0)
                     + getattr(task, "age_boost", 0),
-                    getattr(task, "deadline_t", None), restart, seq)
-        bisect.insort(self._waiters, w, key=lambda x: x.key)
+                    getattr(task, "deadline_t", None), restart, seq,
+                    vec=task.resources)
+        w.sort_key = w.key
+        self._queue.add(w)
         return w
+
+    def _restore_waiter_locked(self, w: _Waiter) -> None:
+        """Re-add a previously-popped waiter object unchanged — same seq,
+        same rank, so it lands back in its exact queue position (the sharded
+        control plane's steal path puts a waiter back when the target shard
+        turns it down)."""
+        self._queue.add(w)
 
     # -- host hooks ---------------------------------------------------------
     def _admit_locked(self, task: Task):  # pragma: no cover - abstract
@@ -279,6 +421,22 @@ class WaiterQueueMixin:
         self._fire(fired)
         return True
 
+    def try_admit(self, task: Task, callback: AdmitCallback):
+        """Admit-or-nothing: like ``admit_or_enqueue`` but never parks the
+        task on failure (and never attempts preemption). Returns the
+        placement on success (callback fired), None otherwise (no state
+        changed). The sharded control plane uses this to probe shards for
+        immediate capacity before choosing where to park."""
+        with self._lock:
+            placement = self._admit_locked(task)
+            if placement is None:
+                return None
+            self._admit_cbs[task.uid] = callback
+            epoch = self._epochs.get(task.uid, 0)
+        self._fire_deferred()
+        callback(task, placement, epoch)
+        return placement
+
     def task_begin_blocking(self, task: Task,
                             timeout: Optional[float] = None):
         """Blocking flavour for synchronous callers (serve loop): waits on an
@@ -300,32 +458,100 @@ class WaiterQueueMixin:
         return box["placement"]
 
     # -- wakeups ------------------------------------------------------------
-    # distinct failed resource vectors memoized per drain pass; beyond this
-    # many, later waiters are probed unconditionally (bounds memo-compare cost)
+    # distinct failed resource vectors memoized per PREEMPTIVE drain pass;
+    # beyond this many, later waiters are probed unconditionally (bounds
+    # memo-compare cost on the scan path). The indexed drain needs no cap:
+    # its class skip is a dict-keyed memo with O(1) lookups.
     _DRAIN_MEMO = 32
 
     def _drain_locked(self, freed: Any = None
                       ) -> List[Tuple[_Waiter, Any, int]]:
-        """Rank-order scan: admit every now-feasible waiter in admission-rank
-        order (priority desc, EDF, arrival), keeping still-infeasible ones
-        queued. Higher-ranked tasks always get first claim on freed capacity,
-        but a too-big head does not block smaller tasks behind it — they are
+        """Admit every now-feasible waiter in admission-rank order (priority
+        desc, EDF, arrival), keeping still-infeasible ones queued. Higher-
+        ranked tasks always get first claim on freed capacity, but a too-big
+        head does not block smaller tasks behind it — smaller classes are
         probed in turn, which avoids head-of-line deadlock.
 
-        Three probe-avoidance layers keep a deep heterogeneous queue cheap:
+        Two implementations behind one contract, selected by
+        ``preempt_enabled``:
 
-          * **deadline shedding** (when ``shed_expired``): a waiter whose
-            deadline already passed is failed with ``DEADLINE_SHED`` instead
-            of probed — it must never be admitted late;
-          * **freed-capacity hint**: ``task_end`` passes the device (or cell
-            group) it just freed; a waiter that provably cannot use that
-            capacity is skipped without a probe (``_hint_may_fit``) instead
-            of rescanned from the front on every wakeup;
-          * **failed-vector memo**: waiters whose resource vector already
-            failed in THIS pass are skipped — identical requirements at the
-            same instant see identical feasibility — so a homogeneous fleet
-            (thousands of equal decode tasks) costs O(admitted + 1) per
-            wakeup, not O(queue)."""
+          * **indexed drain** (non-preemptive hosts): class-at-a-time over
+            the waiter index — O(classes·log + admitted·log) per wakeup
+            instead of O(queue). Identical admission sequence to the scan
+            (see the module docstring's equivalence argument).
+          * **rank-order scan** (preemptive hosts): the historical full
+            scan, kept because a committed eviction changes resident state
+            mid-pass and invalidates the class-skip premise. Mid-scan
+            victim requeues land in the (emptied) index and survive the
+            final merge.
+
+        Both share the probe-avoidance layers: deadline shedding
+        (``shed_expired``), the freed-capacity hint (``_hint_may_fit``),
+        and the failed-vector memo (a failed resource class is never
+        re-probed within a pass)."""
+        if self.preempt_enabled:
+            return self._drain_scan_locked(freed)
+        return self._drain_indexed_locked(freed)
+
+    def _drain_indexed_locked(self, freed: Any = None
+                              ) -> List[Tuple[_Waiter, Any, int]]:
+        fired: List[Tuple[_Waiter, Any, int]] = []
+        q = self._queue
+        if self.shed_expired:
+            # all expired waiters shed via the deadline heap — the same set
+            # the scan would shed (every live waiter with deadline < now),
+            # without touching the unexpired ones; re-sorted by queue rank
+            # so the shed callbacks fire in the scan's order, not the
+            # heap's deadline order
+            for w in sorted(q.pop_expired(self._clock()),
+                            key=lambda w: w.sort_key):
+                self._admit_cbs.pop(w.task.uid, None)
+                self._forget_task_locked(w.task)
+                fired.append((w, DEADLINE_SHED,
+                              self._epochs.get(w.task.uid, 0)))
+        if not len(q):
+            return fired
+        # one entry per resource class, keyed by the class's best waiter:
+        # popping the heap yields the globally best-ranked un-skipped waiter
+        top: List[Tuple[tuple, Any]] = []
+        for vec in q.classes():
+            peek = q.peek_class(vec)
+            if peek is not None:
+                top.append((peek[0], vec))
+        heapq.heapify(top)
+        while top:
+            key, vec = heapq.heappop(top)
+            peek = q.peek_class(vec)
+            if peek is None:
+                continue
+            ckey, w = peek
+            if ckey != key:
+                # the entry was staled by an out-of-band removal; re-rank
+                heapq.heappush(top, (ckey, vec))
+                continue
+            if freed is not None and not self._hint_may_fit(w.task, freed):
+                # the freed capacity provably cannot serve this vector, so
+                # it cannot serve ANY member: the whole class is skipped
+                # (each member counts as a hint skip, as in the scan)
+                self.hint_skips += q.class_size(vec)
+                continue
+            placement = self._admit_locked(w.task)
+            if placement is None:
+                # failed-vector memo: admissions only consume capacity, so
+                # this class stays infeasible for the rest of the pass
+                continue
+            q.discard(w.task.uid)
+            self._admit_cbs[w.task.uid] = w.callback
+            fired.append((w, placement, self._epochs.get(w.task.uid, 0)))
+            nxt = q.peek_class(vec)
+            if nxt is not None:
+                heapq.heappush(top, (nxt[0], vec))
+        return fired
+
+    def _drain_scan_locked(self, freed: Any = None
+                           ) -> List[Tuple[_Waiter, Any, int]]:
+        """Preemptive-path drain: the full rank-order scan (see
+        ``_drain_locked``), run against a drained snapshot of the index."""
         fired: List[Tuple[_Waiter, Any, int]] = []
         still: List[_Waiter] = []
         failed: List[Any] = []    # ResourceVectors infeasible this pass
@@ -341,9 +567,9 @@ class WaiterQueueMixin:
         pfailed: List[Tuple[Any, int, float]] = []
         now = self._clock() if self.shed_expired else None
         # scan a snapshot: a mid-scan preemption re-enqueues its victims into
-        # self._waiters (emptied here), so they survive the final merge
-        # instead of being overwritten by the survivor list
-        pending, self._waiters = self._waiters, []
+        # the index (emptied here), so they survive the final merge instead
+        # of being overwritten by the survivor list
+        pending = self._queue.take_all_sorted()
         for w in pending:  # already sorted by rank
             if (now is not None and w.deadline_t is not None
                     and now > w.deadline_t):
@@ -398,12 +624,10 @@ class WaiterQueueMixin:
                 self._admit_cbs[w.task.uid] = w.callback
                 fired.append((w, placement,
                               self._epochs.get(w.task.uid, 0)))
-        if self._waiters:
-            # preemption victims were re-enqueued mid-scan: merge survivors in
-            for w in still:
-                bisect.insort(self._waiters, w, key=lambda x: x.key)
-        else:
-            self._waiters = still
+        # preemption victims re-enqueued mid-scan are already back in the
+        # index; merging the survivors is an insert, not a list rebuild
+        for w in still:
+            self._queue.add(w)
         return fired
 
     def _fire_deferred(self) -> None:
@@ -431,17 +655,36 @@ class WaiterQueueMixin:
 
     # -- waiter-queue introspection / cancellation --------------------------
     def waiting_count(self) -> int:
+        """Queue depth — an O(1) maintained counter, never a scan."""
         with self._lock:
-            return len(self._waiters)
+            return len(self._queue)
+
+    def queue_stats(self) -> Dict[str, Any]:
+        """O(1) waiter-queue snapshot from maintained counters — safe to
+        poll at depth 1e5 without stalling admission under the lock:
+        ``depth`` (total waiters), ``per_class`` (waiters per admission
+        priority class, aging included), ``classes`` (distinct resource
+        vectors parked), ``hint_skips`` (probe-free skips to date)."""
+        with self._lock:
+            return {
+                "depth": len(self._queue),
+                "per_class": self._queue.class_depth_snapshot(),
+                "classes": len(self._queue.classes()),
+                "hint_skips": self.hint_skips,
+            }
 
     def waiting_tasks(self) -> List[Task]:
+        """Rank-ordered snapshot of parked tasks. Debug/test helper — this
+        sorts (O(n log n)); production telemetry should use
+        ``queue_stats``."""
         with self._lock:
-            return [w.task for w in self._waiters]
+            return [w.task for w in self._queue.sorted_waiters()]
 
     def cancel_wait(self, task: Task) -> bool:
         """Remove ``task`` from the admission queue, dropping its stored
         callback so a cancelled waiter leaks no wakeup state. True iff it
         was waiting (then its callback is guaranteed never to fire again).
+        O(1) against the index.
 
         The ``_epochs`` entry is deliberately KEPT: if the waiter is an
         eviction restart, the superseded run may still be mid-kernel, and
@@ -449,28 +692,35 @@ class WaiterQueueMixin:
         pass the staleness fence. Epoch entries persist after normal
         completion too, so this leaks nothing new."""
         with self._lock:
-            for w in self._waiters:
-                if w.task.uid == task.uid:
-                    self._waiters.remove(w)
-                    self._admit_cbs.pop(task.uid, None)
-                    return True
-        return False
+            if self._queue.discard(task.uid) is None:
+                return False
+            self._admit_cbs.pop(task.uid, None)
+            return True
 
     def cancel_all_waiters(self) -> List[Task]:
         """Drop every waiter (caller decides their fate — e.g. the simulator
         counts never-feasible ones as crashed-at-submit). Epochs are kept,
         as in ``cancel_wait``."""
         with self._lock:
-            out = [w.task for w in self._waiters]
-            for w in self._waiters:
+            waiters = self._queue.take_all_sorted()
+            for w in waiters:
                 self._admit_cbs.pop(w.task.uid, None)
-            self._waiters.clear()
-            return out
+            return [w.task for w in waiters]
 
     # -- epoch fencing ------------------------------------------------------
     def admission_epoch(self, task: Task) -> int:
         with self._lock:
             return self._epochs.get(task.uid, 0)
+
+    def adopt_epoch(self, task: Task, epoch: int) -> None:
+        """Carry a task's admission epoch in from another engine (the
+        sharded control plane migrating a waiter across shards): the fence
+        must keep rejecting the superseded run's ``task_end`` after the
+        move, so the target engine takes the max of both histories."""
+        with self._lock:
+            cur = self._epochs.get(task.uid, 0)
+            if epoch > cur:
+                self._epochs[task.uid] = epoch
 
     def _stale_locked(self, task: Task, epoch: Optional[int]) -> bool:
         return (epoch is not None
@@ -480,16 +730,26 @@ class WaiterQueueMixin:
         """After capacity shrinks (mark_dead), sweep out waiters that can
         never be admitted again — without this they would wait forever once
         the last task_end wakeup has fired. Returns (waiter, None, epoch)
-        tuples for ``_fire``: placement None tells the caller to give up."""
+        tuples for ``_fire``: placement None tells the caller to give up.
+
+        Feasibility-forever depends only on the resource vector, so the
+        check runs once per class, not once per waiter."""
         failed: List[Tuple[_Waiter, Any, int]] = []
-        still: List[_Waiter] = []
-        for w in self._waiters:
-            if self.can_ever_fit(w.task):
-                still.append(w)
-            else:
+        q = self._queue
+        for vec in q.classes():
+            peek = q.peek_class(vec)
+            if peek is None or self.can_ever_fit(peek[1].task):
+                continue
+            while True:
+                peek = q.peek_class(vec)
+                if peek is None:
+                    break
+                w = peek[1]
+                q.discard(w.task.uid)
+                self._admit_cbs.pop(w.task.uid, None)
                 self._forget_task_locked(w.task)
                 failed.append((w, None, self._epochs.get(w.task.uid, 0)))
-        self._waiters = still
+        failed.sort(key=lambda e: e[0].sort_key)  # fire in rank order
         return failed
 
     def _requeue_evicted_locked(self, evicted: Sequence[Task]) -> None:
@@ -505,6 +765,35 @@ class WaiterQueueMixin:
             self._epochs[t.uid] = self._epochs.get(t.uid, 0) + 1
             self._enqueue_locked(t, cb, restart=True)
 
+    # -- cross-shard handoff (used by scheduler.sharded) --------------------
+    def steal_best_waiter(self, pred: Callable[[Task], bool]
+                          ) -> Optional[_Waiter]:
+        """Pop the best-ranked waiter whose task satisfies ``pred``.
+        ``pred`` must depend only on the task's resource vector (it is
+        evaluated once per class, on the class's best member). Returns the
+        popped ``_Waiter`` (callback and rank intact) or None. The caller
+        either re-homes the waiter on another engine or hands it back via
+        ``_restore_waiter_locked``/``restore_waiter``."""
+        with self._lock:
+            best: Optional[Tuple[tuple, _Waiter]] = None
+            for vec in self._queue.classes():
+                peek = self._queue.peek_class(vec)
+                if peek is None or not pred(peek[1].task):
+                    continue
+                if best is None or peek[0] < best[0]:
+                    best = peek
+            if best is None:
+                return None
+            w = best[1]
+            self._queue.discard(w.task.uid)
+            self._admit_cbs.pop(w.task.uid, None)
+            return w
+
+    def restore_waiter(self, w: _Waiter) -> None:
+        """Put a stolen waiter back exactly where it was (same seq/rank)."""
+        with self._lock:
+            self._restore_waiter_locked(w)
+
 
 class Scheduler(WaiterQueueMixin):
     """Base scheduler: subclasses implement ``select_device``."""
@@ -519,7 +808,15 @@ class Scheduler(WaiterQueueMixin):
         # admission attempts (successful or not) — the scheduler-overhead
         # metric benchmarks/bench_executor.py compares across executors
         self.begin_attempts = 0
+        # largest alive device, maintained on mark_dead/revive so
+        # can_ever_fit is O(1) per submission instead of O(devices)
+        self._max_alive_hbm = max(
+            (d.total_hbm for d in self.devices if d.alive), default=0)
         self._init_waiters()
+
+    def _refresh_capacity_locked(self) -> None:
+        self._max_alive_hbm = max(
+            (d.total_hbm for d in self.devices if d.alive), default=0)
 
     # -- policy hooks ------------------------------------------------------
     def select_device(self, task: Task) -> Optional[DeviceState]:
@@ -549,8 +846,8 @@ class Scheduler(WaiterQueueMixin):
         return dev.index
 
     def can_ever_fit(self, task: Task) -> bool:
-        return any(d.alive and task.resources.hbm_bytes <= d.total_hbm
-                   for d in self.devices)
+        # O(1): against the maintained largest-alive-device capacity
+        return task.resources.hbm_bytes <= self._max_alive_hbm
 
     def infeasible_reason(self, task: Task) -> str:
         alive = [d for d in self.devices if d.alive]
@@ -592,6 +889,7 @@ class Scheduler(WaiterQueueMixin):
         with self._lock:
             dev = self.devices[device_index]
             dev.alive = False
+            self._refresh_capacity_locked()
             evicted = list(dev.residents.values())
             for t in evicted:
                 dev.release(t)
@@ -605,6 +903,7 @@ class Scheduler(WaiterQueueMixin):
     def revive(self, device_index: int) -> None:
         with self._lock:
             self.devices[device_index].alive = True
+            self._refresh_capacity_locked()
             # only the revived device changed: hint the drain at it
             fired = self._drain_locked(freed=device_index)
         self._fire(fired)

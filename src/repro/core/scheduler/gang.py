@@ -113,38 +113,74 @@ class GangScheduler(WaiterQueueMixin):
         return True
 
     def _find_group(self, task: Task) -> Optional[GangReservation]:
+        """Best feasible group for ``task``, evaluating candidates in the
+        same enumeration order (and with the same tie-breaks) as the
+        historical full scan, but against the topology's incremental tile
+        index: infeasible tiles cost O(1) via cached aggregates instead of
+        O(tile size) member walks, and a completely-free tile returns
+        immediately — its key is provably the unbeatable (0.0, 0.0), since
+        every link internal to a free group has both endpoints resident-free
+        and therefore carries no charge."""
         r = task.resources
         k = max(r.chips, 1)
         per_chip = r.hbm_bytes // k
         need = slots_needed(task)
         best: Optional[GangReservation] = None
         best_key: Tuple[float, float] = (float("inf"), float("inf"))
-        for group in self.topo.candidate_groups(k):
-            if not all(self._member_ok(c, per_chip, need)
-                       for c in group.cells()):
-                continue
-            if self.policy == "alg2" \
-                    and not self.topo.link_headroom_ok(group, r):
-                continue  # links hard: collectives must not oversubscribe
-            # Alg. 3 tie-break, summed over the group: fewest in-use warps
-            # first, then least-contended links (soft-link pressure)
-            key = (sum(self.topo.cells[c].in_use_demand
-                       for c in group.cells()),
-                   self.topo.max_link_load(group))
-            if key < best_key:
-                best, best_key = group, key
-            if key == (0.0, 0.0):
-                return group  # idle group on idle links: cannot do better
+        if k > self.topo.pod_size:
+            # whole-pod windows: candidates are O(pods), keep the direct walk
+            for group in self.topo.candidate_groups(k):
+                if not all(self._member_ok(c, per_chip, need)
+                           for c in group.cells()):
+                    continue
+                if self.policy == "alg2" \
+                        and not self.topo.link_headroom_ok(group, r):
+                    continue
+                key = (sum(self.topo.cells[c].in_use_demand
+                           for c in group.cells()),
+                       self.topo.max_link_load(group))
+                if key < best_key:
+                    best, best_key = group, key
+                if key == (0.0, 0.0):
+                    return group
+            return best
+        for (sr, sc) in self.topo.shapes_for(k):
+            idx = self.topo.shape_index(sr, sc)
+            for pos in idx.positions:
+                if idx.dead[pos]:
+                    continue
+                min_free, max_slots, sum_demand = self.topo.tile_agg(idx, pos)
+                if per_chip > min_free:
+                    continue
+                if self.policy == "alg2" and max_slots + need > SLOTS:
+                    continue
+                group = self.topo.tile_group(sr, sc, pos)
+                if not idx.busy[pos]:
+                    # free group on idle links: cannot do better (and the
+                    # alg2 link-headroom check passes trivially — per-task
+                    # share is clamped to one link)
+                    return group
+                if self.policy == "alg2" \
+                        and not self.topo.link_headroom_ok(group, r):
+                    continue  # links hard: collectives must not oversubscribe
+                # Alg. 3 tie-break, summed over the group: fewest in-use
+                # warps first, then least-contended links (soft pressure)
+                key = (sum_demand, self.topo.max_link_load(group))
+                if key < best_key:
+                    best, best_key = group, key
+                if key == (0.0, 0.0):
+                    return group  # idle group on idle links
         return best
 
     def can_ever_fit(self, task: Task) -> bool:
+        # O(shapes) against the maintained alive-tile counters instead of a
+        # full candidate enumeration per submission
         r = task.resources
         k = max(r.chips, 1)
         per_chip = r.hbm_bytes // k
-        need = slots_needed(task)
-        return any(all(self._member_ever_ok(c, per_chip, need)
-                       for c in group.cells())
-                   for group in self.topo.candidate_groups(k))
+        if self.policy == "alg2" and slots_needed(task) > SLOTS:
+            return False
+        return self.topo.any_alive_group(k, per_chip)
 
     def infeasible_reason(self, task: Task) -> str:
         r = task.resources
@@ -194,6 +230,7 @@ class GangScheduler(WaiterQueueMixin):
             d.used_slots += need
             d.residents[task.uid] = task
         self.topo.reserve_links(task.uid, group, r)
+        self.topo.note_cells(group.cells())  # keep the tile index exact
         self.bound[task.uid] = group
         task.device = group.lead
 
@@ -211,6 +248,7 @@ class GangScheduler(WaiterQueueMixin):
                 d.used_hbm -= per_chip
                 d.used_slots -= need
         self.topo.release_links(task.uid)
+        self.topo.note_cells(group.cells())  # keep the tile index exact
         return group
 
     # -- paper API at gang granularity ----------------------------------------
@@ -250,7 +288,7 @@ class GangScheduler(WaiterQueueMixin):
         at the front of its priority class)."""
         cell = self._as_cell(cell)
         with self._lock:
-            self.topo.cells[cell].alive = False
+            self.topo.set_alive(cell, False)
             evicted: List[Task] = []
             for uid, group in list(self.bound.items()):
                 if cell not in set(group.cells()):
@@ -272,7 +310,7 @@ class GangScheduler(WaiterQueueMixin):
     def revive(self, cell: CellOrIndex) -> None:
         cell = self._as_cell(cell)
         with self._lock:
-            self.topo.cells[cell].alive = True
+            self.topo.set_alive(cell, True)
             fired = self._drain_locked(freed=(cell,))
         self._fire(fired)
 

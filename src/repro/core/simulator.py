@@ -36,7 +36,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import weakref
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import interference
 from repro.core.executor import ExecRecord
@@ -106,6 +106,10 @@ class _JobState:
     cancelled: bool = False
     cancel_requested: bool = False
     shed: bool = False     # parked past its deadline and shed at a drain
+    # resolution hook, fired exactly once when the job resolves (done,
+    # crashed, cancelled or shed) — the Cluster front-end maintains its
+    # aggregate stats counters here instead of re-scanning every handle
+    on_done: Optional[Callable[["_JobState"], None]] = None
     records: List[ExecRecord] = dataclasses.field(default_factory=list)
 
 
@@ -169,12 +173,15 @@ class Simulator:
 
     # -- open-arrival API ----------------------------------------------------
     def submit(self, job: Job, *, priority: Optional[int] = None,
-               deadline_t: Optional[float] = None) -> _JobState:
+               deadline_t: Optional[float] = None,
+               on_done: Optional[Callable[[_JobState], None]] = None
+               ) -> _JobState:
         """Submit ``job`` at the CURRENT virtual time — legal at any point,
         including while earlier jobs are mid-flight (call ``step`` between
         submissions to advance the clock). ``deadline_t`` is an absolute
         virtual-clock deadline; the scheduler's admission queue enforces the
-        priority/EDF ordering."""
+        priority/EDF ordering. ``on_done`` fires exactly once when the job
+        resolves (done/crashed/cancelled/shed)."""
         if priority is not None:
             job.priority = priority
         if deadline_t is not None:
@@ -185,7 +192,7 @@ class Simulator:
             if t.gang_id is None:
                 t.gang_id = job.gang_id
         job.arrival_t = self.now
-        js = _JobState(job)
+        js = _JobState(job, on_done=on_done)
         if not job.tasks:
             # empty job: completes instantly with a zeroed record, holding no
             # worker (mirrors the live executor's empty-tasks path)
@@ -196,6 +203,8 @@ class Simulator:
             job.finish_t = self.now
             self._completed += 1
             self._turnaround[job.name or str(job.uid)] = 0.0
+            if js.on_done is not None:
+                js.on_done(js)
             return js
         self._queue.append(js)
         self._try_start()
@@ -524,6 +533,8 @@ class Simulator:
             self._turnaround[js.job.name or str(js.job.uid)] = \
                 self.now - js.job.arrival_t
         self._idle_workers += 1
+        if js.on_done is not None:
+            js.on_done(js)
 
     def _end_cancelled(self, js: _JobState, *, held_worker: bool) -> None:
         js.done = True
@@ -533,6 +544,8 @@ class Simulator:
         self._cancelled += 1
         if held_worker:
             self._idle_workers += 1
+        if js.on_done is not None:
+            js.on_done(js)
 
     def _end_shed(self, js: _JobState) -> None:
         # a shed waiter was parked (holding a sim worker) but never admitted
@@ -542,6 +555,8 @@ class Simulator:
         js.job.finish_t = self.now
         self._shed += 1
         self._idle_workers += 1
+        if js.on_done is not None:
+            js.on_done(js)
 
     def _reap_crashed(self) -> None:
         done = [(t, js) for t, js in self._crashing if t <= self.now + _EPS]

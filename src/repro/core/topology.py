@@ -34,7 +34,8 @@ used, now shared by every topology client.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Sequence, Tuple
+import heapq
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.scheduler.base import DEFAULT_HBM, DeviceState
 from repro.core.task import ResourceVector
@@ -117,11 +118,101 @@ def slice_shapes(chips: int, rows: int, cols: int) -> List[Tuple[int, int]]:
     return shapes
 
 
+TilePos = Tuple[int, int, int]         # (pod, r0, c0) of an aligned tile
+
+
+class _ShapeIndex:
+    """Incremental per-shape tile index (the sub-linear placement substrate).
+
+    Aligned tiles of one (sr x sc) shape are DISJOINT — the tiling steps by
+    the shape itself — so every cell belongs to at most one tile per shape
+    and a cell-state flip updates exactly one tile's counters. Maintains,
+    per tile position (enumeration order = ``candidate_groups`` order):
+
+      * ``busy``  — member cells that are dead or hold residents; 0 means
+        the tile is a completely free group;
+      * ``dead``  — member cells marked dead; ``alive_tiles`` counts tiles
+        at dead == 0 (the O(1) ``can_ever_fit`` input);
+      * ``free_heap`` — a lazy min-heap of tile positions that became fully
+        free (the ISSUE's per-shape free list; stale entries are skimmed on
+        peek);
+      * ``agg``  — cached (min_free_hbm, max_used_slots, sum_demand) per
+        tile, EVICTED whenever a member cell changes and recomputed on
+        demand in the same cell order the full enumeration used, so float
+        tie-breaks match the historical scan bit-for-bit.
+    """
+
+    __slots__ = ("sr", "sc", "rows", "cols", "positions", "busy", "dead",
+                 "agg", "alive_tiles", "free_heap")
+
+    def __init__(self, topo: "Topology", sr: int, sc: int):
+        self.sr, self.sc = sr, sc
+        self.rows, self.cols = topo.rows, topo.cols
+        self.positions: List[TilePos] = [
+            (p, r0, c0)
+            for p in range(topo.pods)
+            for r0 in range(0, topo.rows - sr + 1, sr)
+            for c0 in range(0, topo.cols - sc + 1, sc)]
+        self.busy: Dict[TilePos, int] = {}
+        self.dead: Dict[TilePos, int] = {}
+        self.agg: Dict[TilePos, Tuple[int, int, float]] = {}
+        for pos in self.positions:
+            b = d = 0
+            for cell in self.tile_cells(pos):
+                dev = topo.cells[cell]
+                if not dev.alive:
+                    d += 1
+                if not dev.alive or dev.residents:
+                    b += 1
+            self.busy[pos] = b
+            self.dead[pos] = d
+        self.alive_tiles = sum(1 for pos in self.positions
+                               if not self.dead[pos])
+        self.free_heap: List[TilePos] = [pos for pos in self.positions
+                                         if not self.busy[pos]]
+        heapq.heapify(self.free_heap)
+
+    def tile_cells(self, pos: TilePos) -> Iterator[Cell]:
+        p, r0, c0 = pos
+        for r in range(r0, r0 + self.sr):
+            for c in range(c0, c0 + self.sc):
+                yield (p, r, c)
+
+    def tile_of(self, cell: Cell) -> Optional[TilePos]:
+        """The unique tile containing ``cell`` (None for remainder cells
+        beyond the last aligned tile of an axis)."""
+        p, r, c = cell
+        r0 = r - r % self.sr
+        c0 = c - c % self.sc
+        if r0 + self.sr > self.rows or c0 + self.sc > self.cols:
+            return None
+        return (p, r0, c0)
+
+    def peek_free(self) -> Optional[TilePos]:
+        """Earliest-enumeration fully-free tile, or None (lazy heap skim)."""
+        h = self.free_heap
+        while h and self.busy[h[0]]:
+            heapq.heappop(h)
+        return h[0] if h else None
+
+
 class Topology:
     """A multi-pod chip grid with per-chip state and per-link bandwidth
     accounting. Schedulers are clients: they decide *policy* (which candidate
     group to take, what counts as feasible); the topology owns *structure*
-    (cells, shapes, links) and the link ledger."""
+    (cells, shapes, links) and the link ledger.
+
+    **Placement index.** Beyond enumeration (``candidate_groups``), the
+    topology maintains incremental per-shape tile indexes (built lazily on
+    first query for a shape, then updated on every occupancy/liveness change
+    via ``note_cells`` / ``set_alive``) so a placement pass costs O(1) per
+    candidate tile instead of O(tile size), ``can_ever_fit``-style checks
+    are O(shapes), and completely-free groups come off a maintained free
+    list. Contract: all cell-state mutation after the first indexed query
+    must go through the owning scheduler's reserve/release paths (which call
+    ``note_cells``) or ``set_alive`` — out-of-band mutation should call
+    ``invalidate_index()``. Cells are uniform-HBM (``hbm_per_chip``), which
+    the O(1) feasibility shortcuts rely on."""
 
     def __init__(self, pods: int = 1, rows: int = 4, cols: int = 4,
                  hbm_per_chip: int = DEFAULT_HBM,
@@ -132,12 +223,21 @@ class Topology:
             (p, r, c): DeviceState(index=self.flat_index((p, r, c)),
                                    total_hbm=hbm_per_chip)
             for p in range(pods) for r in range(rows) for c in range(cols)}
+        self.hbm_per_chip = hbm_per_chip
         # link -> aggregate bandwidth share ([0, n) — may exceed 1 when a
         # soft-link policy oversubscribes; the simulator dilates then)
         self.link_used: Dict[Link, float] = {}
         # task uid -> {link: share} charged at reserve time, so release is
         # exact even if the task's resources object is rebuilt meanwhile
         self._charges: Dict[int, Dict[Link, float]] = {}
+        # placement index state (see class docstring): per-shape tile
+        # indexes built lazily, plus per-cell busy/dead snapshots so a
+        # note_cells call can turn "cell changed" into exact tile deltas
+        self._shape_indexes: Dict[Tuple[int, int], _ShapeIndex] = {}
+        self._shape_cache: Dict[int, List[Tuple[int, int]]] = {}
+        self._cell_busy: Dict[Cell, bool] = {c: False for c in self.cells}
+        self._cell_dead: Dict[Cell, bool] = {c: False for c in self.cells}
+        self._pod_dead: List[int] = [0] * pods
 
     # -- indexing -----------------------------------------------------------
     @property
@@ -195,6 +295,135 @@ class Topology:
         spanning request — and a scheduler should fail it fast rather than
         park it forever."""
         return next(iter(self.candidate_groups(chips)), None) is not None
+
+    # -- incremental placement index -----------------------------------------
+    def shapes_for(self, chips: int) -> List[Tuple[int, int]]:
+        """``slice_shapes`` memoized per gang size (the list is a pure
+        function of the static grid)."""
+        s = self._shape_cache.get(chips)
+        if s is None:
+            s = slice_shapes(chips, self.rows, self.cols)
+            self._shape_cache[chips] = s
+        return s
+
+    def shape_index(self, sr: int, sc: int) -> _ShapeIndex:
+        idx = self._shape_indexes.get((sr, sc))
+        if idx is None:
+            idx = _ShapeIndex(self, sr, sc)
+            self._shape_indexes[(sr, sc)] = idx
+        return idx
+
+    def tile_group(self, sr: int, sc: int, pos: TilePos) -> GangReservation:
+        p, r0, c0 = pos
+        return self._reservation([SliceRect(p, r0, c0, sr, sc)])
+
+    def tile_agg(self, idx: _ShapeIndex,
+                 pos: TilePos) -> Tuple[int, int, float]:
+        """Cached per-tile (min free HBM, max used slots, sum of in-use
+        demand). Recomputed on demand after eviction; the demand sum walks
+        cells in rect order — the exact float-add sequence of the historical
+        per-candidate scan — so placement tie-breaks cannot drift."""
+        a = idx.agg.get(pos)
+        if a is None:
+            min_free: Optional[int] = None
+            max_slots = 0
+            sum_demand = 0.0
+            for cell in idx.tile_cells(pos):
+                d = self.cells[cell]
+                free = d.free_hbm
+                if min_free is None or free < min_free:
+                    min_free = free
+                if d.used_slots > max_slots:
+                    max_slots = d.used_slots
+                sum_demand += d.in_use_demand
+            a = (min_free if min_free is not None else 0,
+                 max_slots, sum_demand)
+            idx.agg[pos] = a
+        return a
+
+    def note_cells(self, cells_changed: Iterable[Cell]) -> None:
+        """Occupancy/liveness of these cells may have changed: update every
+        built shape index incrementally. O(changed cells x built shapes) —
+        tiles are disjoint per shape, so each cell touches exactly one tile
+        per shape. Reserve/release paths call this; see the class docstring
+        for the out-of-band-mutation contract."""
+        for cell in cells_changed:
+            d = self.cells[cell]
+            dead = not d.alive
+            busy = dead or bool(d.residents)
+            old_dead = self._cell_dead[cell]
+            old_busy = self._cell_busy[cell]
+            if dead != old_dead:
+                self._cell_dead[cell] = dead
+                self._pod_dead[cell[0]] += 1 if dead else -1
+            if busy != old_busy:
+                self._cell_busy[cell] = busy
+            for idx in self._shape_indexes.values():
+                pos = idx.tile_of(cell)
+                if pos is None:
+                    continue
+                idx.agg.pop(pos, None)
+                if busy != old_busy:
+                    n = idx.busy[pos] + (1 if busy else -1)
+                    idx.busy[pos] = n
+                    if n == 0:
+                        heapq.heappush(idx.free_heap, pos)
+                if dead != old_dead:
+                    n = idx.dead[pos] + (1 if dead else -1)
+                    idx.dead[pos] = n
+                    if dead and n == 1:
+                        idx.alive_tiles -= 1
+                    elif not dead and n == 0:
+                        idx.alive_tiles += 1
+
+    def set_alive(self, cell: Cell, alive: bool) -> None:
+        """Liveness flips route through here so the index stays exact."""
+        self.cells[cell].alive = alive
+        self.note_cells((cell,))
+
+    def invalidate_index(self) -> None:
+        """Drop all built shape indexes (rebuilt lazily from true cell
+        state). Escape hatch for callers that mutated cells out-of-band."""
+        self._shape_indexes.clear()
+        for cell, d in self.cells.items():
+            self._cell_dead[cell] = not d.alive
+            self._cell_busy[cell] = not d.alive or bool(d.residents)
+        self._pod_dead = [0] * self.pods
+        for (p, _, _), dead in self._cell_dead.items():
+            if dead:
+                self._pod_dead[p] += 1
+
+    def any_alive_group(self, chips: int, per_chip: int) -> bool:
+        """O(shapes) ``can_ever_fit`` input: does a candidate group exist
+        whose members are ALL alive and could each hold ``per_chip`` bytes
+        when empty? (Uniform ``hbm_per_chip`` makes the memory test
+        group-independent.)"""
+        if per_chip > self.hbm_per_chip:
+            return False
+        if chips <= self.pod_size:
+            return any(self.shape_index(sr, sc).alive_tiles > 0
+                       for (sr, sc) in self.shapes_for(chips))
+        if chips % self.pod_size:
+            return False
+        m = chips // self.pod_size
+        return any(all(self._pod_dead[p] == 0 for p in range(p0, p0 + m))
+                   for p0 in range(self.pods - m + 1))
+
+    def free_groups(self, chips: int) -> Iterator[GangReservation]:
+        """Completely-free candidate groups straight off the maintained
+        free lists (preferred shapes first, enumeration order within a
+        shape) — no grid re-enumeration. Spanning sizes fall back to the
+        enumerated path (pod windows are few)."""
+        if chips <= self.pod_size:
+            for (sr, sc) in self.shapes_for(chips):
+                idx = self.shape_index(sr, sc)
+                for pos in sorted(p for p in set(idx.free_heap)
+                                  if not idx.busy[p]):
+                    yield self.tile_group(sr, sc, pos)
+            return
+        for group in self.candidate_groups(chips):
+            if all(not self._cell_busy[c] for c in group.cells()):
+                yield group
 
     # -- link model ----------------------------------------------------------
     @staticmethod

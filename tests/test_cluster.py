@@ -425,7 +425,7 @@ def test_property_eviction_restart_front_of_its_class_only(seed):
         waiters.append((pri, t.name))
         assert not sched.admit_or_enqueue(t, cb)
     sched.mark_dead(dev0)                         # victim re-enters class 1
-    order = [w.task.name for w in sched._waiters]
+    order = [t.name for t in sched.waiting_tasks()]
     pos = {nm: i for i, nm in enumerate(order)}
     assert "victim" in pos                        # still parked (no room)
     for pri, nm in waiters:

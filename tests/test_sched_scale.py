@@ -1,0 +1,461 @@
+"""Fleet-scale scheduler core battery (ISSUE 6 tentpole): the indexed
+admission queue, the incremental gang-placement index, and the sharded
+per-pod control plane must be BEHAVIOR-PRESERVING rewrites.
+
+  * trace replay: seeded open-arrival traces (priority / EDF deadlines /
+    anti-starvation aging / deadline shedding / device-death restarts /
+    cancels) driven through the pre-refactor sorted-list engine
+    (``scheduler.reference``) and the indexed engine must produce the
+    IDENTICAL admission sequence, placements, shed set, hint-skip count,
+    probe count, and final queue;
+  * gang placement: ``_find_group`` against the incremental tile index must
+    match a test-local copy of the historical full-enumeration oracle —
+    same feasibility verdict and same (demand, link-pressure) score — after
+    every step of random reserve / release / death / revive sequences;
+  * sharded control plane: no task lost across shard boundaries, stealing
+    actually fires for imbalanced completions, pod death re-homes both
+    evicted residents and parked waiters, pod-spanning gangs fail fast;
+  * ``Cluster.stats()`` O(1) counters must equal a full recompute from the
+    handle list across mixed DONE / CRASHED / CANCELLED / SHED outcomes.
+"""
+import random
+
+import pytest
+from _hypothesis_fallback import given, settings, st
+
+from repro.core.cluster import Cluster, JobStatus
+from repro.core.scheduler import (
+    GangScheduler, MGBAlg2Scheduler, MGBAlg3Scheduler,
+    ReferenceAlg2Scheduler, ReferenceAlg3Scheduler, ShardedScheduler,
+)
+from repro.core.scheduler.base import DEADLINE_SHED, SLOTS, slots_needed
+from repro.core.task import Job, ResourceVector, Task, UnitTask
+
+GB = 1024**3
+
+
+def mk_task(name, mem_gb=2.0, demand=0.5, chips=1, est=10.0):
+    vec = ResourceVector(hbm_bytes=int(mem_gb * GB), flops=1e12,
+                         bytes_accessed=1e9, est_seconds=est,
+                         core_demand=demand, bw_demand=demand, chips=chips)
+    return Task(units=[UnitTask(fn=None, memobjs=frozenset({name}),
+                                resources=vec, name=name)], name=name)
+
+
+# ---------------------------------------------------------------------------
+# trace replay: indexed queue vs the verbatim pre-refactor engine
+# ---------------------------------------------------------------------------
+
+# few distinct vectors => distinct failing classes stay far below the
+# indexed drain's memo width, so even begin_attempts must match exactly
+TRACE_MEMS = (2.0, 4.0, 7.0)
+
+
+def gen_trace(rng, n_ops):
+    """Abstract op list; indices are resolved against the replay's own
+    resident/waiting bookkeeping so both engines see literally the same
+    call sequence as long as they admit identically."""
+    ops = []
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.45:
+            ops.append(("submit", rng.choice(TRACE_MEMS), rng.randrange(4),
+                        rng.choice([None, None, rng.uniform(1.0, 60.0)]),
+                        rng.choice([0, 0, 0, 2])))      # age_boost (aging)
+        elif r < 0.70:
+            ops.append(("end", rng.randrange(1 << 30)))
+        elif r < 0.78:
+            ops.append(("cancel", rng.randrange(1 << 30)))
+        elif r < 0.88:
+            ops.append(("tick", rng.uniform(0.5, 15.0)))
+        elif r < 0.94:
+            ops.append(("dead", rng.randrange(1 << 30)))
+        else:
+            ops.append(("revive", rng.randrange(1 << 30)))
+    return ops
+
+
+def replay(cls, ops, *, n_dev=3, shed=False):
+    """Drive one engine through the trace under a fake clock; returns the
+    full observable event log and the engine (for counter comparison)."""
+    sched = cls(n_dev)
+    clock = [0.0]
+    sched._clock = lambda: clock[0]
+    sched.shed_expired = shed
+    log, resident, waiting = [], [], []
+    gone = set()                          # uids that reached shed/fail
+
+    def cb(t, placement, epoch):
+        if t in waiting:
+            waiting.remove(t)
+        if placement is DEADLINE_SHED:
+            gone.add(t.uid)
+            log.append(("shed", t.name))
+        elif placement is None:
+            gone.add(t.uid)
+            log.append(("fail", t.name))
+        else:
+            log.append(("admit", t.name, placement))
+            resident.append(t)
+
+    k = 0
+    for op in ops:
+        kind = op[0]
+        if kind == "submit":
+            _, mem, prio, dl, boost = op
+            t = mk_task(f"t{k}", mem_gb=mem)
+            k += 1
+            t.priority = prio
+            t.deadline_t = clock[0] + dl if dl is not None else None
+            if boost:
+                t.age_boost = boost
+            waiting.append(t)
+            sched.admit_or_enqueue(t, cb)
+        elif kind == "end" and resident:
+            sched.task_end(resident.pop(op[1] % len(resident)))
+        elif kind == "cancel" and waiting:
+            t = waiting.pop(op[1] % len(waiting))
+            assert sched.cancel_wait(t)
+        elif kind == "tick":
+            clock[0] += op[1]
+            sched.notify()
+        elif kind == "dead":
+            # mark_dead requeues waiter-path residents itself (restart
+            # priority, callback re-fires); an evicted task is re-admitted
+            # synchronously (second resident entry), re-parked, or failed
+            evicted = sched.mark_dead(op[1] % n_dev)
+            for t in evicted:
+                resident.remove(t)
+            for t in evicted:
+                if t not in resident and t.uid not in gone \
+                        and t not in waiting:
+                    waiting.append(t)
+        elif kind == "revive":
+            sched.revive(op[1] % n_dev)
+            sched.notify()
+    while resident:                       # final drain empties the queue
+        sched.task_end(resident.pop())
+    return log, sched
+
+
+PAIRS = [(ReferenceAlg2Scheduler, MGBAlg2Scheduler),
+         (ReferenceAlg3Scheduler, MGBAlg3Scheduler)]
+
+
+def assert_engines_agree(ref_cls, idx_cls, ops, shed):
+    log_r, s_r = replay(ref_cls, ops, shed=shed)
+    log_i, s_i = replay(idx_cls, ops, shed=shed)
+    # the preserved contract, bit-for-bit: admission sequence WITH
+    # placements, shed sequence, fail sequence. (Within a single drain the
+    # indexed engine sheds every expired waiter before admitting, where the
+    # scan interleaved both by rank — the only tolerated difference.)
+    for kind in ("admit", "shed", "fail"):
+        assert [e for e in log_r if e[0] == kind] \
+            == [e for e in log_i if e[0] == kind], kind
+    assert s_r.hint_skips == s_i.hint_skips
+    assert s_r.begin_attempts == s_i.begin_attempts
+    assert s_r.waiting_count() == s_i.waiting_count()
+    assert ([t.name for t in s_r.waiting_tasks()]
+            == [t.name for t in s_i.waiting_tasks()])
+    assert s_r.queue_stats()["depth"] == s_i.queue_stats()["depth"]
+
+
+@pytest.mark.parametrize("ref_cls,idx_cls", PAIRS,
+                         ids=["alg2", "alg3"])
+@pytest.mark.parametrize("shed", [False, True], ids=["keep", "shed"])
+@pytest.mark.parametrize("seed", range(6))
+def test_trace_replay_matches_reference(ref_cls, idx_cls, shed, seed):
+    ops = gen_trace(random.Random(seed), 150)
+    assert_engines_agree(ref_cls, idx_cls, ops, shed)
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=25, deadline=None)
+def test_property_trace_replay_parity(seed):
+    """Property form: ANY seeded trace replays identically (shedding on —
+    the strictest mode, since it adds the expiry sweep to every drain)."""
+    ops = gen_trace(random.Random(seed), 120)
+    assert_engines_agree(ReferenceAlg3Scheduler, MGBAlg3Scheduler, ops,
+                         shed=True)
+
+
+# ---------------------------------------------------------------------------
+# gang placement: tile index vs the historical enumeration oracle
+# ---------------------------------------------------------------------------
+
+def oracle_find_group(sched, task):
+    """Test-local copy of the pre-refactor ``_find_group``: full candidate
+    enumeration, per-member walks, per-candidate resident-demand sums."""
+    r = task.resources
+    k = max(r.chips, 1)
+    per_chip = r.hbm_bytes // k
+    need = slots_needed(task)
+    best, best_key = None, (float("inf"), float("inf"))
+    for group in sched.topo.candidate_groups(k):
+        if not all(sched._member_ok(c, per_chip, need)
+                   for c in group.cells()):
+            continue
+        if sched.policy == "alg2" \
+                and not sched.topo.link_headroom_ok(group, r):
+            continue
+        key = (sum(sched.topo.cells[c].in_use_demand
+                   for c in group.cells()),
+               sched.topo.max_link_load(group))
+        if key < best_key:
+            best, best_key = group, key
+        if key == (0.0, 0.0):
+            return group
+    return best
+
+
+def group_score(sched, group):
+    return (sum(sched.topo.cells[c].in_use_demand for c in group.cells()),
+            sched.topo.max_link_load(group))
+
+
+@pytest.mark.parametrize("policy", ["alg2", "alg3"])
+@pytest.mark.parametrize("seed", range(4))
+def test_find_group_matches_enumeration_oracle(policy, seed):
+    """After every mutation, the indexed probe and the full enumeration must
+    agree on feasibility and on the placement SCORE (ties may pick different
+    groups of equal score; the score is the policy-visible contract)."""
+    rng = random.Random(seed)
+    sched = GangScheduler(pods=2, rows=4, cols=4, policy=policy)
+    n = sched.topo.total_chips
+    probes = [mk_task(f"p{c}", mem_gb=2.0 * c, chips=c, demand=0.4)
+              for c in (1, 2, 4, 8, 16)]
+    resident = []
+    for step in range(50):
+        r = rng.random()
+        if r < 0.5:
+            chips = rng.choice((1, 2, 4, 8))
+            t = mk_task(f"g{step}", mem_gb=3.0 * chips, chips=chips,
+                        demand=rng.choice((0.2, 0.5)))
+            if sched.task_begin(t) is not None:
+                resident.append(t)
+        elif r < 0.8 and resident:
+            sched.task_end(resident.pop(rng.randrange(len(resident))))
+        elif r < 0.9:
+            for t in sched.mark_dead(rng.randrange(n)):
+                resident.remove(t)
+        else:
+            sched.revive(rng.randrange(n))
+        for probe in probes:
+            g_idx = sched._find_group(probe)
+            g_ora = oracle_find_group(sched, probe)
+            assert (g_idx is None) == (g_ora is None), \
+                (step, probe.name, g_idx, g_ora)
+            if g_idx is not None:
+                assert group_score(sched, g_idx) \
+                    == group_score(sched, g_ora), (step, probe.name)
+
+
+def test_invalidate_index_recovers_from_external_mutation():
+    """The escape hatch: out-of-band cell mutation + invalidate_index()
+    must leave the probe agreeing with the oracle again."""
+    sched = GangScheduler(pods=1, rows=4, cols=4)
+    t = mk_task("g", mem_gb=8.0, chips=4)
+    assert sched.task_begin(t) is not None
+    # simulate an external actor flipping liveness without set_alive
+    cell = next(iter(sched.topo.cells))
+    sched.topo.cells[cell].alive = False
+    sched.topo.invalidate_index()
+    probe = mk_task("p", mem_gb=2.0, chips=4)
+    g_idx = sched._find_group(probe)
+    g_ora = oracle_find_group(sched, probe)
+    assert (g_idx is None) == (g_ora is None)
+    if g_idx is not None:
+        assert group_score(sched, g_idx) == group_score(sched, g_ora)
+
+
+# ---------------------------------------------------------------------------
+# sharded control plane
+# ---------------------------------------------------------------------------
+
+def _collector():
+    """Admission log with placements normalized to flat device indices
+    (the gang shards deliver ``GangReservation``s; ``lead`` is the
+    globally-translated audit index)."""
+    admitted = []
+
+    def cb(t, placement, epoch):
+        if placement is not None and placement is not DEADLINE_SHED \
+                and not isinstance(placement, int):
+            placement = placement.lead
+        admitted.append((t, placement))
+    return admitted, cb
+
+
+def test_sharded_no_task_lost():
+    """Every submitted task is admitted exactly once, whatever shard it
+    lands on, under full-fleet churn."""
+    sched = ShardedScheduler(pods=2, rows=2, cols=2)   # 2 shards x 4 chips
+    admitted, cb = _collector()
+    tasks = [mk_task(f"t{i}", mem_gb=8.0) for i in range(30)]
+    for t in tasks:
+        sched.admit_or_enqueue(t, cb)
+    guard = 0
+    while len(admitted) < len(tasks):
+        guard += 1
+        assert guard < 200, f"stalled at {len(admitted)}/{len(tasks)}"
+        t, _ = admitted[guard - 1]
+        sched.task_end(t)
+    assert sorted(t.name for t, _ in admitted) \
+        == sorted(t.name for t in tasks)
+    assert len({t.uid for t, _ in admitted}) == len(tasks)
+    assert sched.waiting_count() == 0
+
+
+def test_sharded_steals_fire_on_imbalanced_completions():
+    """Completions land only on shard 0: once its local queue drains, every
+    further admission there must be a cross-shard steal."""
+    sched = ShardedScheduler(pods=2, rows=2, cols=2)
+    admitted, cb = _collector()
+    n_dev = len(sched.devices)
+    for i in range(n_dev + 10):                 # fill fleet + park 10
+        sched.admit_or_enqueue(mk_task(f"t{i}", mem_gb=16.0), cb)
+    assert sched.waiting_count() == 10
+    ended = set()
+    guard = 0
+    while sched.waiting_count() and guard < 100:
+        guard += 1
+        vic = next(t for t, p in admitted
+                   if p < 4 and t.uid not in ended)
+        ended.add(vic.uid)
+        sched.task_end(vic)
+    assert sched.waiting_count() == 0
+    assert sched.steals > 0
+    assert len(admitted) == n_dev + 10
+    # stats surface the stealing activity
+    qs = sched.queue_stats()
+    assert qs["steals"] == sched.steals
+    assert qs["depth"] == 0
+
+
+def test_sharded_pod_death_rehomes_evicted_and_parked():
+    """Killing every chip of shard 0 must leave nothing stranded: a waiter
+    parked there is pulled by the live shard, and an evicted resident
+    resubmitted after the death lands on shard 1."""
+    sched = ShardedScheduler(pods=2, rows=2, cols=2)
+    admitted, cb = _collector()
+    for i in range(8):                          # exactly fill both shards
+        sched.admit_or_enqueue(mk_task(f"t{i}", mem_gb=16.0), cb)
+    assert len(admitted) == 8 and sched.waiting_count() == 0
+    parked = mk_task("parked", mem_gb=16.0)
+    sched.admit_or_enqueue(parked, cb)          # parks (fleet is full)
+    evicted = []
+    for d in range(4):                          # shard 0's global indices
+        evicted.extend(sched.mark_dead(d))
+    assert len(evicted) == 4
+    # the 4 evicted residents were requeued by the shard, declared
+    # impossible there as it died, and re-homed to the live shard's queue;
+    # the parked waiter survived wherever it was
+    assert sched.waiting_count() == 5
+    assert sched.rehomes >= 4
+    # churn the live shard: every stranded task must land on shard 1
+    ended = set()
+    guard = 0
+    while sched.waiting_count() and guard < 20:
+        guard += 1
+        vic = next(t for t, p in admitted if p >= 4 and t.uid not in ended)
+        ended.add(vic.uid)
+        sched.task_end(vic)
+    assert sched.waiting_count() == 0
+    post_death = admitted[8:]
+    assert {t.name for t, _ in post_death} \
+        == {t.name for t in evicted} | {"parked"}
+    assert all(isinstance(p, int) and p >= 4 for _, p in post_death)
+
+
+def test_sharded_spanning_gang_fails_fast():
+    """A gang wider than one pod shard can never exist: the feasibility
+    surface says so up front, and the cluster turns that into a crashed
+    job instead of parking it forever."""
+    sched = ShardedScheduler(pods=2, rows=2, cols=2)
+    wide = mk_task("wide", mem_gb=8.0 * 8, chips=8)
+    assert not sched.can_ever_fit(wide)
+    assert "pod" in sched.infeasible_reason(wide)
+    c = Cluster(ShardedScheduler(pods=2, rows=2, cols=2), workers=2,
+                backend="sim")
+    h = c.submit(Job(tasks=[mk_task("wide2", mem_gb=64.0, chips=8,
+                                    est=1.0)], name="wide2"))
+    c.drain()
+    assert h.status is JobStatus.CRASHED
+
+
+def test_sharded_placement_translation_is_global():
+    """Shard-local placements must surface as flat fleet indices: two
+    single-chip fills land 4 placements < 4 and 4 placements >= 4."""
+    sched = ShardedScheduler(pods=2, rows=2, cols=2)
+    admitted, cb = _collector()
+    for i in range(8):
+        sched.admit_or_enqueue(mk_task(f"t{i}", mem_gb=16.0), cb)
+    places = sorted(p for _, p in admitted)
+    assert places == list(range(8))
+    assert len(sched.devices) == 8
+
+
+# ---------------------------------------------------------------------------
+# Cluster.stats(): O(1) counters vs recompute from handles
+# ---------------------------------------------------------------------------
+
+def _recompute_from_handles(c):
+    sts = [h.status for h in c.handles]
+    done = [h for h in c.handles if h.status is JobStatus.DONE]
+    t0 = min(h.job.arrival_t for h in c.handles)
+    t1 = max((h.job.finish_t for h in c.handles if h.job.finish_t >= 0),
+             default=t0)
+    makespan = max(t1 - t0, 1e-9)
+    turn = sum(h.job.finish_t - h.job.arrival_t for h in done)
+    return {
+        "completed": len(done),
+        "crashed": sum(s is JobStatus.CRASHED for s in sts),
+        "cancelled": sum(s is JobStatus.CANCELLED for s in sts),
+        "shed": sum(s is JobStatus.SHED for s in sts),
+        "makespan_s": makespan,
+        "mean_turnaround_s": turn / max(len(done), 1),
+    }
+
+
+def test_cluster_stats_counters_match_handle_scan_sim():
+    c = Cluster(MGBAlg3Scheduler(1), workers=4, backend="sim",
+                shed_late=True)
+    for i in range(6):                          # plain jobs -> DONE
+        c.submit(Job(tasks=[mk_task(f"ok{i}", mem_gb=4.0, est=1.0)],
+                     name=f"ok{i}"))
+    c.submit(Job(tasks=[mk_task("big", mem_gb=64.0, est=1.0)],
+                 name="big"))                   # never feasible -> CRASHED
+    parked = c.submit(Job(tasks=[mk_task("park", mem_gb=14.0, est=1.0)],
+                          name="park"))
+    parked.cancel()                             # -> CANCELLED
+    c.submit(Job(tasks=[mk_task("late", mem_gb=14.0, est=1.0)],
+                 name="late"), deadline_s=1e-6)  # parks, expires -> SHED
+    c.drain()
+    got = c.stats()
+    want = _recompute_from_handles(c)
+    for key, val in want.items():
+        assert got[key] == pytest.approx(val), (key, got, want)
+    assert want["completed"] >= 1 and want["crashed"] >= 1
+    assert want["cancelled"] >= 1 and want["shed"] >= 1
+    assert got["throughput_jobs_per_s"] \
+        == pytest.approx(want["completed"] / want["makespan_s"])
+
+
+def test_cluster_stats_counters_match_handle_scan_live():
+    c = Cluster(MGBAlg3Scheduler(2), workers=2)
+    for i in range(5):
+        c.submit(Job(tasks=[mk_task(f"j{i}", mem_gb=4.0)], name=f"j{i}"),
+                 runners=[lambda device: None])
+    c.drain()
+    got = c.stats()
+    want = _recompute_from_handles(c)
+    for key in ("completed", "crashed", "cancelled", "shed"):
+        assert got[key] == want[key]
+    assert got["mean_turnaround_s"] \
+        == pytest.approx(want["mean_turnaround_s"])
+
+
+def test_cluster_stats_empty_is_zeroed():
+    c = Cluster(MGBAlg3Scheduler(1), workers=1, backend="sim")
+    s = c.stats()
+    assert s["completed"] == 0 and s["makespan_s"] == 0.0
