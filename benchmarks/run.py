@@ -11,8 +11,8 @@ import time
 
 from benchmarks import (
     bench_executor, bench_gang, bench_preempt, bench_sched_scale,
-    fig4_alg2_vs_alg3, fig5_throughput, fig6_nn_schedgpu, kernels_bench,
-    table2_crashes, table3_turnaround, table4_slowdown,
+    bench_serve, fig4_alg2_vs_alg3, fig5_throughput, fig6_nn_schedgpu,
+    kernels_bench, table2_crashes, table3_turnaround, table4_slowdown,
 )
 
 EXPERIMENTS = {
@@ -27,11 +27,13 @@ EXPERIMENTS = {
     "gang": bench_gang.run,
     "preempt": bench_preempt.run,
     "sched_scale": bench_sched_scale.run,
+    "serve": bench_serve.run,
 }
 
 # experiments whose run() takes smoke= (tiny inputs, assert-only, no JSON);
 # --smoke forwards to these and leaves the rest at full size
-SMOKE_CAPABLE = frozenset({"executor", "gang", "preempt", "sched_scale"})
+SMOKE_CAPABLE = frozenset({"executor", "gang", "preempt", "sched_scale",
+                           "serve"})
 
 
 def main() -> None:

@@ -201,7 +201,9 @@ class Cluster:
     def submit(self, job: Union[Job, ExecJob], *,
                runners: Optional[List[Callable]] = None,
                priority: Optional[int] = None,
-               deadline_s: Optional[float] = None) -> JobHandle:
+               deadline_s: Optional[float] = None,
+               on_done: Optional[Callable[["JobHandle"], None]] = None
+               ) -> JobHandle:
         """Submit ``job`` NOW — at any time, including while earlier jobs are
         executing. ``priority`` (higher first) and ``deadline_s`` (seconds
         from submission; EDF within a priority class) rank the job in the
@@ -209,7 +211,15 @@ class Cluster:
         already on the Job (default class 0, no deadline). Live backend
         wants an ``ExecJob`` (or a ``Job`` plus ``runners``); the sim
         backend takes a plain ``Job``. Returns a ``JobHandle``
-        immediately."""
+        immediately.
+
+        ``on_done(handle)`` (optional) fires exactly once when the job
+        resolves (DONE/CRASHED/CANCELLED/SHED) — the streaming-completion
+        hook serve.engine chains prefill→decode-slot joins on. Live backend:
+        fires on a backend thread; keep it non-blocking. It may fire before
+        ``submit`` returns (an instantly-resolving job)."""
+        done_cb = self._on_job_resolved if on_done is None \
+            else self._chain_on_done(on_done)
         with self._submit_lock:
             if self._ex is not None:
                 ej = self._as_execjob(job, runners)
@@ -217,7 +227,7 @@ class Cluster:
                               if deadline_s is not None else None)
                 state: Union[_JobRun, _JobState] = self._ex.submit(
                     ej, priority=priority, deadline_t=deadline_t,
-                    on_done=self._on_job_resolved)
+                    on_done=done_cb)
                 handle = JobHandle(self, ej.job, state)
             else:
                 plain = job.job if isinstance(job, ExecJob) else job
@@ -225,13 +235,25 @@ class Cluster:
                               if deadline_s is not None else None)
                 state = self._sim.submit(plain, priority=priority,
                                          deadline_t=deadline_t,
-                                         on_done=self._on_job_resolved)
+                                         on_done=done_cb)
                 handle = JobHandle(self, plain, state)
             with self._stats_lock:
                 self._n_jobs += 1
                 self._t0 = min(self._t0, handle.job.arrival_t)
             self.handles.append(handle)
             return handle
+
+    def _chain_on_done(self, user_cb: Callable[["JobHandle"], None]
+                       ) -> Callable[[Union[_JobRun, _JobState]], None]:
+        """Wrap a user completion callback around the stats-folding backend
+        callback. The backend may resolve an (e.g. empty) job INSIDE
+        ``submit``, before the public handle exists — so the handle is built
+        on demand from the backend state rather than captured."""
+        def cb(state: Union[_JobRun, _JobState]) -> None:
+            self._on_job_resolved(state)
+            job = state.ej.job if isinstance(state, _JobRun) else state.job
+            user_cb(JobHandle(self, job, state))
+        return cb
 
     def _on_job_resolved(self, state: Union[_JobRun, _JobState]) -> None:
         """Backend resolution callback (fired exactly once per job): fold the

@@ -56,18 +56,32 @@ class OOMError(RuntimeError):
     """Raised when an admitted task exceeds its device's memory (CG path)."""
 
 
+# ``ExecRecord.t_start`` sentinel: the task crashed BEFORE its kernel ever
+# launched (infeasible-at-submit, fleet-shrank-while-parked, pre-dispatch
+# OOM). Distinct from any real timestamp so latency consumers can exclude
+# never-started records instead of folding a fake zero-length execution
+# window into their means — check ``rec.started``, not ``rec.crashed``.
+NEVER_STARTED = -1.0
+
+
 @dataclasses.dataclass
 class ExecRecord:
     job: str
     task: str
     device: int          # lead device of the placement (-1 = never placed)
     t_queue: float
-    t_start: float
+    t_start: float       # NEVER_STARTED if the task crashed pre-launch
     t_end: float
     crashed: bool = False
     # size of the reserved device group (1 for single-chip tasks); the gang
     # bench groups queueing-delay percentiles by this
     gang_chips: int = 1
+
+    @property
+    def started(self) -> bool:
+        """True iff the task's kernel actually began executing — only then
+        do t_start/t_end bound a real execution window."""
+        return self.t_start >= 0.0
 
 
 @dataclasses.dataclass
@@ -364,10 +378,9 @@ class Executor:
             # feasible device-group shape): crash-at-submit with the
             # scheduler's explanation instead of waiting forever
             jr.ej.job.error = self.sched.infeasible_reason(task)
-            now = time.monotonic()
             self._record(jr, ExecRecord(
-                jr.ej.job.name, task.name, -1, jr.t_queue, now, now,
-                crashed=True))
+                jr.ej.job.name, task.name, -1, jr.t_queue, NEVER_STARTED,
+                time.monotonic(), crashed=True))
             self._finish(jr, crashed=True)
             return
 
@@ -386,10 +399,9 @@ class Executor:
                 return
             if placement is None:
                 jr.ej.job.error = self.sched.infeasible_reason(t)
-                now = time.monotonic()
                 self._record(jr, ExecRecord(
-                    jr.ej.job.name, t.name, -1, jr.t_queue, now, now,
-                    crashed=True))
+                    jr.ej.job.name, t.name, -1, jr.t_queue, NEVER_STARTED,
+                    time.monotonic(), crashed=True))
                 self._finish(jr, crashed=True)
                 return
             self._ready.put(_Ready(jr, idx, placement, epoch))
@@ -418,10 +430,9 @@ class Executor:
         if any(self.sched.devices[d].oom() for d in devs):
             if not self.sched.task_end(task, epoch=item.epoch):
                 return  # fenced: evicted + re-admitted elsewhere mid-check
-            now = time.monotonic()
             self._record(jr, ExecRecord(
-                jr.ej.job.name, task.name, lead, jr.t_queue,
-                now, now, crashed=True, gang_chips=len(devs)))
+                jr.ej.job.name, task.name, lead, jr.t_queue, NEVER_STARTED,
+                time.monotonic(), crashed=True, gang_chips=len(devs)))
             self._finish(jr, crashed=True)
             return
         # serialize with any still-running superseded attempt of this task,
@@ -574,7 +585,7 @@ class PollingExecutor(Executor):
                 with self._rec_lock:
                     self.records.append(ExecRecord(
                         ej.job.name, task.name, lead, t_queue,
-                        time.monotonic(), time.monotonic(), crashed=True,
+                        NEVER_STARTED, time.monotonic(), crashed=True,
                         gang_chips=len(devs)))
                 raise OOMError(
                     f"{task.name}: {task.resources.hbm_bytes} B exceeded "

@@ -131,6 +131,11 @@ class DeviceState:
             del self.residents[task.uid]
             self.used_hbm -= task.resources.hbm_bytes
             self.used_slots -= slots_needed(task)
+            if task.placed_host is not None:
+                # settle the host's row budget on EVERY release path —
+                # normal shrink, eviction, preemption alike
+                task.placed_host.grown_now -= 1
+                task.placed_host = None
 
     def oom(self) -> bool:
         return self.used_hbm > self.total_hbm
@@ -315,6 +320,19 @@ class WaiterQueueMixin:
         # the heterogeneous-queue benchmarks/tests)
         self.hint_skips = 0
 
+    @staticmethod
+    def _class_key(task: Task) -> Any:
+        """Resource-class key for the waiter index. Feasibility-within-a-pass
+        normally depends only on the resource vector; for a GROW task (a
+        decode-slot delta bound to specific host residents, see
+        ``Task.grow_hosts``) it also depends on WHERE the hosts live, so two
+        same-vector slots with different host sets must not share a class —
+        one failing its probe must not retire the other for the pass."""
+        hosts = getattr(task, "grow_hosts", None)
+        if hosts:
+            return (task.resources, tuple(h.uid for h in hosts))
+        return task.resources
+
     def _enqueue_locked(self, task: Task, callback: AdmitCallback, *,
                         restart: bool = False) -> _Waiter:
         if restart:
@@ -331,7 +349,7 @@ class WaiterQueueMixin:
                     getattr(task, "priority", 0)
                     + getattr(task, "age_boost", 0),
                     getattr(task, "deadline_t", None), restart, seq,
-                    vec=task.resources)
+                    vec=self._class_key(task))
         w.sort_key = w.key
         self._queue.add(w)
         return w
@@ -399,7 +417,11 @@ class WaiterQueueMixin:
         fired: List[Tuple[_Waiter, Any, int]] = []
         with self._lock:
             placement = self._admit_locked(task)
-            if placement is None and self.preempt_enabled:
+            if placement is None and self.preempt_enabled \
+                    and not getattr(task, "grow_hosts", None):
+                # (grow tasks never preempt: a slot delta is batch growth,
+                # not an independent arrival — evicting a resident could
+                # evict the very host batch the slot wants to join)
                 # an urgent arrival may evict strictly lower-ranked residents
                 # instead of parking behind them (preemptive deadline/priority
                 # enforcement); evicted victims re-enter the queue at the
@@ -580,15 +602,17 @@ class WaiterQueueMixin:
                               self._epochs.get(w.task.uid, 0)))
                 continue
             placement = None
+            ckey = self._class_key(w.task)
             if freed is not None and not self._hint_may_fit(w.task, freed):
                 self.hint_skips += 1
-            elif any(f == w.task.resources for f in failed):
-                pass  # identical vector already failed this pass
+            elif any(f == ckey for f in failed):
+                pass  # identical resource class already failed this pass
             else:
                 placement = self._admit_locked(w.task)
                 if placement is None and len(failed) < self._DRAIN_MEMO:
-                    failed.append(w.task.resources)
-            if placement is None and self.preempt_enabled:
+                    failed.append(ckey)
+            if placement is None and self.preempt_enabled \
+                    and not getattr(w.task, "grow_hosts", None):
                 tprio = getattr(w.task, "priority", 0)
                 tdl = w.task.deadline_t if w.task.deadline_t is not None \
                     else math.inf
@@ -832,10 +856,16 @@ class Scheduler(WaiterQueueMixin):
     def _hint_may_fit(self, task: Task, freed: int) -> bool:
         # sound: a parked waiter was infeasible on EVERY device, and only
         # the freed device's state improved since — so it is admissible now
-        # iff the freed device itself would take it
+        # iff the freed device itself would take it. A grow task can only
+        # land next to one of its hosts, so unless the freed device hosts
+        # one, the probe is skipped.
+        if task.grow_hosts:
+            return any(h.device == freed for h in task.grow_hosts)
         return self.device_feasible(task, self.devices[freed])
 
     def _admit_locked(self, task: Task) -> Optional[int]:
+        if task.grow_hosts:
+            return self._admit_grow_locked(task)
         self.begin_attempts += 1
         dev = self.select_device(task)
         if dev is None:
@@ -845,7 +875,64 @@ class Scheduler(WaiterQueueMixin):
         self.placements.append((task.uid, dev.index))
         return dev.index
 
+    def _grow_feasible_locked(self, task: Task,
+                              dev: DeviceState, host: Task) -> bool:
+        """Hard feasibility for a slot delta on a host's device, regardless
+        of the policy subclass: the slot's KV bytes must physically fit, and
+        the host's row budget (``slot_budget`` — a decode loop has exactly
+        max_batch physical cache rows) must have a row free. Hosts with no
+        budget fall back to the device-wide compute-slot ledger — but budget
+        is the right cap for serving, where co-located prefill tasks may
+        legitimately oversubscribe compute slots (Alg. 3) without that
+        saying anything about cache-row availability."""
+        if not (dev.alive and host.uid in dev.residents
+                and task.resources.hbm_bytes <= dev.free_hbm):
+            return False
+        if host.slot_budget is not None:
+            return host.grown_now < host.slot_budget
+        return dev.used_slots + slots_needed(task) <= SLOTS
+
+    def _admit_grow_locked(self, task: Task) -> Optional[int]:
+        """Admission for a resident-growth delta (``task.grow_hosts``): only
+        devices currently hosting one of the host tasks are candidates —
+        the delta is batch growth, its bytes live next to its batch. Among
+        feasible hosts, least-loaded (fewest used slots, then most free
+        HBM) wins, balancing joins across decode loops."""
+        self.begin_attempts += 1
+        best: Optional[Tuple[DeviceState, Task]] = None
+
+        def rank(dev: DeviceState, host: Task) -> tuple:
+            return (host.grown_now, dev.used_slots, -dev.free_hbm)
+
+        for host in task.grow_hosts:
+            if host.device is None:
+                continue
+            dev = self.devices[host.device]
+            if not self._grow_feasible_locked(task, dev, host):
+                continue
+            if best is None or rank(dev, host) < rank(*best):
+                best = (dev, host)
+        if best is None:
+            return None
+        dev, host = best
+        dev.admit(task)
+        task.device = dev.index
+        task.placed_host = host
+        host.grown_now += 1
+        self.placements.append((task.uid, dev.index))
+        return dev.index
+
     def can_ever_fit(self, task: Task) -> bool:
+        if task.grow_hosts:
+            # a grow task is feasible-forever iff some host still lives on
+            # an alive device big enough to EVER hold the delta (current
+            # occupancy excluded — that can drain)
+            return any(
+                h.device is not None
+                and self.devices[h.device].alive
+                and h.uid in self.devices[h.device].residents
+                and task.resources.hbm_bytes <= self.devices[h.device].total_hbm
+                for h in task.grow_hosts)
         # O(1): against the maintained largest-alive-device capacity
         return task.resources.hbm_bytes <= self._max_alive_hbm
 
@@ -879,6 +966,46 @@ class Scheduler(WaiterQueueMixin):
             fired = self._drain_locked(freed=freed)
         self._fire(fired)
         return True
+
+    # -- resident growth (continuous batching; see serve.engine) -------------
+    def bind_resident(self, task: Task, device_index: int) -> bool:
+        """Checked PINNED admission: admit ``task`` onto a specific device
+        (memory + slot checked under the lock) or refuse without queueing.
+        serve.engine uses this to plant one long-lived decode-loop resident
+        per device; the loop's slot joins then grow against it via
+        ``task_grow``. Release is a normal ``task_end``."""
+        with self._lock:
+            dev = self.devices[device_index]
+            if not dev.alive \
+                    or task.resources.hbm_bytes > dev.free_hbm \
+                    or dev.used_slots + slots_needed(task) > SLOTS:
+                return False
+            self.begin_attempts += 1
+            dev.admit(task)
+            task.device = dev.index
+            self.placements.append((task.uid, dev.index))
+            return True
+
+    def task_grow(self, slot_task: Task, hosts: Sequence[Task],
+                  callback: AdmitCallback) -> bool:
+        """Grow a resident batch by one probed delta: ``slot_task`` (its
+        ResourceVector is the slot's KV-cache bytes + per-row compute share)
+        is admitted onto a device hosting one of ``hosts``, or parked in the
+        SAME admission queue as everything else — so a join that would OOM
+        the device waits for a retire instead of growing the batch, and the
+        memory-hard guarantee covers batch growth. Returns True iff grown
+        immediately; otherwise ``callback`` fires on a later drain (or with
+        DEADLINE_SHED / None, exactly like ``admit_or_enqueue``)."""
+        slot_task.grow_hosts = tuple(hosts)
+        return self.admit_or_enqueue(slot_task, callback)
+
+    def task_shrink(self, slot_task: Task, *,
+                    epoch: Optional[int] = None) -> bool:
+        """Retire a slot admitted through ``task_grow``. Alias of
+        ``task_end`` (same epoch fencing, same freed-capacity drain hint) —
+        named so call sites read as batch shrink, and so the symmetry
+        grow/shrink ↔ begin/end is explicit."""
+        return self.task_end(slot_task, epoch=epoch)
 
     # -- fault tolerance -----------------------------------------------------
     def mark_dead(self, device_index: int) -> List[Task]:

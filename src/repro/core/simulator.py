@@ -39,7 +39,7 @@ import weakref
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import interference
-from repro.core.executor import ExecRecord
+from repro.core.executor import NEVER_STARTED, ExecRecord
 from repro.core.scheduler.base import DEADLINE_SHED, Scheduler
 from repro.core.task import Job, Task
 from repro.core.topology import placement_devices
@@ -417,7 +417,7 @@ class Simulator:
             js.job.error = self.sched.infeasible_reason(task)
             js.job.finish_t = self.now
             rec = ExecRecord(js.job.name, task.name, -1, self.now,
-                             self.now, self.now, crashed=True)
+                             NEVER_STARTED, self.now, crashed=True)
             js.records.append(rec)
             self.records.append(rec)
             self._finish_job(js, crashed_job=True)

@@ -81,6 +81,22 @@ class Task:
     # so a trace can be grouped by gang end to end. None for solo tasks
     # (the executor backfills the job's gang_id at submit).
     gang_id: Optional[str] = None
+    # resident-growth binding (continuous batching, serve.engine): when set,
+    # this task is a resource DELTA against an already-admitted resident —
+    # a decode slot joining a running batch. Admission then only considers
+    # the devices currently hosting one of these host tasks (the slot's KV
+    # bytes must land next to its batch), still memory/slot-checked, so the
+    # memory-hard guarantee covers batch GROWTH, not just task admission.
+    grow_hosts: Optional[Tuple["Task", ...]] = None
+    # host-side row budget: max concurrent grow-slots this resident can hold
+    # (a decode loop has exactly max_batch physical cache rows). Checked by
+    # the scheduler's grow admission against `grown_now`, which it maintains
+    # (incremented on grow-admit, decremented by DeviceState.release via the
+    # slot's `placed_host` back-pointer — so evictions settle it too). None
+    # means no per-host cap beyond the device-wide compute-slot ledger.
+    slot_budget: Optional[int] = None
+    grown_now: int = 0
+    placed_host: Optional["Task"] = None
     # preemption bookkeeping: times this task was evicted by the preemptive
     # scheduler layer, counted against PreemptionPolicy.budget (a task at
     # budget is immune to further eviction). Each eviction also adds

@@ -1,12 +1,23 @@
-"""End-to-end serving driver: batched prefill + decode under the
-compiler-guided scheduler — every request batch is a GPU task whose resource
-vector comes from the compiled prefill/decode executables (repro.core.probe),
-streamed through the open-arrival ``Cluster`` front-end: each request is
-``cluster.submit``-ed with a per-request deadline (EDF admission within its
-priority class), blocked batches hold no thread (they park in the
-scheduler's admission queue), and completions wake the next admission. The
-execution pool is sized to the device count, so thousands of queued decode
-tasks need only a handful of threads.
+"""End-to-end serving driver: prefill + decode under the compiler-guided
+scheduler, with two serving disciplines over the same open-arrival
+``Cluster`` front-end:
+
+* **static** (default): every request batch is ONE GPU task whose resource
+  vector comes from the compiled prefill/decode executables
+  (repro.core.probe). Each batch is ``cluster.submit``-ed with a
+  per-request deadline (EDF admission within its priority class), blocked
+  batches hold no thread (they park in the scheduler's admission queue),
+  and completions wake the next admission. Rows in the last batch beyond
+  ``requests`` are shape padding — computed, but never counted as served
+  tokens.
+* **continuous** (``--continuous``): requests stream individually through
+  ``repro.serve.engine.ServeEngine`` — per-device decode loops whose batch
+  composition changes between steps; prefills are short high-priority
+  tasks, each decode-slot join is a probed KV-delta admitted through the
+  scheduler (memory-safe batch growth).
+
+Both report per-request TTFT (arrival → first token) and TPOT (mean
+inter-token time over the decode tail).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
@@ -31,6 +42,14 @@ from repro.models.model import init_params
 from repro.serve.decode import greedy_generate, make_prefill_step
 
 
+def _pct(xs, p):
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(int(p * (len(xs) - 1) + 0.5), len(xs) - 1)
+    return xs[i]
+
+
 def serve(arch: str, *, requests: int = 16, batch: int = 4,
           prompt_len: int = 64, gen_len: int = 32, seed: int = 0,
           num_devices: int = 2, workers: int = 0,
@@ -47,6 +66,10 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
 
     rng = np.random.default_rng(seed)
     n_batches = (requests + batch - 1) // batch
+    # real (non-padding) rows per batch: the final batch is shape-padded to
+    # ``batch`` so every batch shares one compiled executable, but only
+    # ``requests`` rows exist — padded rows must not count as served tokens
+    rows = [min(batch, requests - i * batch) for i in range(n_batches)]
     # probe ONE representative batch (all batches share shapes, so they share
     # the compiled executable and the resource vector)
     first_prompts = jnp.asarray(rng.integers(
@@ -63,6 +86,9 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
     cluster = Cluster(sched, workers=workers or num_devices,
                       shed_late=shed_late, preempt=preempt or None)
     handles = []
+    # per-batch wall-clock marks filled by the runner: (submit, first-token,
+    # last-token) — the per-request TTFT/TPOT instrumentation
+    marks = [[0.0, -1.0, -1.0] for _ in range(n_batches)]
     t0 = time.time()
     # open arrival: each request batch is submitted as it "comes in", with
     # its own deadline — admission is EDF within the priority class, so
@@ -75,13 +101,17 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
             b["embeds"] = jnp.asarray(rng.standard_normal(
                 (batch, prompt_len, cfg.d_model), dtype=np.float32))
 
-        def runner(device, b=b):
+        def runner(device, b=b, i=i):
             logits, cache = prefill(params, b)
-            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            first = jax.block_until_ready(
+                jnp.argmax(logits, axis=-1).astype(jnp.int32))
+            marks[i][1] = time.time()
             out, _ = greedy_generate(cfg, params, cache, first, prompt_len,
                                      gen_len - 1)
             jax.block_until_ready(out)
+            marks[i][2] = time.time()
 
+        marks[i][0] = time.time()
         task = Task(units=[UnitTask(fn=None, memobjs=frozenset({f"req{i}"}),
                                     resources=vec, name=f"req{i}")],
                     name=f"req{i}")
@@ -93,9 +123,20 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
     stats = cluster.stats()
     cluster.shutdown()
     wall = time.time() - t0
-    toks = stats["completed"] * batch * gen_len
+    done = [i for i, h in enumerate(handles) if h.status is JobStatus.DONE]
+    # only real rows of completed batches count — a padded row generated
+    # tokens nobody asked for, and a crashed/shed batch served none
+    toks = sum(rows[i] for i in done) * gen_len
+    # never-started records (crashed pre-launch) carry the NEVER_STARTED
+    # sentinel, not a fake timestamp — they must not enter latency stats
     lat = [r.t_end - r.t_start
-           for h in handles for r in h.records if not r.crashed]
+           for h in handles for r in h.records
+           if not r.crashed and r.started]
+    ttfts = [marks[i][1] - marks[i][0]
+             for i in done for _ in range(rows[i]) if marks[i][1] >= 0]
+    tpots = ([(marks[i][2] - marks[i][1]) / (gen_len - 1)
+              for i in done for _ in range(rows[i]) if marks[i][2] >= 0]
+             if gen_len > 1 else [])
     met = [h for h in handles if h.status is JobStatus.DONE
            and h.records and h.records[-1].t_end
            <= h.job.deadline_t]
@@ -107,6 +148,8 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
             "tokens_generated": toks, "wall_s": wall,
             "tokens_per_s": toks / wall,
             "mean_batch_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "p50_ttft_s": _pct(ttfts, 0.50), "p99_ttft_s": _pct(ttfts, 0.99),
+            "p50_tpot_s": _pct(tpots, 0.50), "p99_tpot_s": _pct(tpots, 0.99),
             "completed": stats["completed"], "crashed": stats["crashed"],
             "deadlines_met": len(met),
             "deadline_met_rate": len(met) / max(n_batches, 1),
@@ -115,6 +158,39 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
             "migrations": stats["migrations"],
             "sched_attempts": stats["sched_attempts"],
             "placements": sched.placements}
+
+
+def serve_continuous(arch: str, *, requests: int = 16, batch: int = 4,
+                     prompt_len: int = 64, gen_len: int = 32, seed: int = 0,
+                     num_devices: int = 2, workers: int = 0,
+                     ttft_slo_s: float = 5.0, tpot_slo_s: float = 1.0,
+                     shed_late: bool = False) -> dict:
+    """Continuous-batching counterpart: per-request streaming through
+    ServeEngine; ``batch`` becomes each decode loop's max rows."""
+    from repro.serve.engine import SLO, JaxModel, ServeEngine
+
+    cfg = get_arch(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    model = JaxModel(cfg, params, max_batch=batch,
+                     max_seq=prompt_len + gen_len, attn_impl="flash_jnp")
+    cluster = Cluster(MGBAlg3Scheduler(num_devices),
+                      workers=workers or num_devices, shed_late=shed_late)
+    eng = ServeEngine(cluster, model, max_batch=batch,
+                      slo=SLO(ttft_s=ttft_slo_s, tpot_s=tpot_slo_s))
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for _ in range(requests):
+        eng.submit(prompt=jnp.asarray(rng.integers(
+            0, cfg.vocab, (1, prompt_len), dtype=np.int32)),
+            gen_len=gen_len)
+    eng.drain()
+    wall = time.time() - t0
+    m = eng.metrics()
+    eng.shutdown()
+    cluster.shutdown()
+    m.update(wall_s=wall, tokens_per_s=m["tokens"] / wall,
+             sched_attempts=cluster.stats()["sched_attempts"])
+    return m
 
 
 def main():
@@ -128,7 +204,10 @@ def main():
     ap.add_argument("--workers", type=int, default=0,
                     help="execution-pool size (0 = one per device)")
     ap.add_argument("--deadline-s", type=float, default=5.0,
-                    help="per-request admission deadline (EDF ordering)")
+                    help="per-request admission deadline (EDF ordering); "
+                         "continuous mode reads it as the TTFT SLO")
+    ap.add_argument("--tpot-slo-s", type=float, default=1.0,
+                    help="continuous mode: time-per-output-token SLO")
     ap.add_argument("--shed-late", action="store_true",
                     help="fail requests still parked past their deadline "
                          "(JobStatus.SHED) instead of serving them late")
@@ -136,8 +215,29 @@ def main():
                     help="preemptive EDF: an arriving earlier-deadline "
                          "request may evict a resident one (checkpoint-"
                          "based, work-conserving) instead of queueing "
-                         "behind it")
+                         "behind it (static mode only)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching via repro.serve.engine: "
+                         "requests stream individually, decode batches "
+                         "grow/shrink per step under scheduler admission")
     args = ap.parse_args()
+    if args.continuous:
+        res = serve_continuous(
+            args.arch, requests=args.requests, batch=args.batch,
+            prompt_len=args.prompt_len, gen_len=args.gen_len,
+            num_devices=args.num_devices, workers=args.workers,
+            ttft_slo_s=args.deadline_s, tpot_slo_s=args.tpot_slo_s,
+            shed_late=args.shed_late)
+        print(f"[serve --continuous] {res['done']}/{res['requests']} done, "
+              f"{res['tokens']} tokens in {res['wall_s']:.1f}s "
+              f"({res['tokens_per_s']:.1f} tok/s, "
+              f"TTFT p50/p99 {res['p50_ttft_s'] * 1e3:.0f}/"
+              f"{res['p99_ttft_s'] * 1e3:.0f} ms, "
+              f"TPOT p50/p99 {res['p50_tpot_s'] * 1e3:.0f}/"
+              f"{res['p99_tpot_s'] * 1e3:.0f} ms, "
+              f"goodput {res['goodput_rps']:.2f} req/s, "
+              f"{res['shed']} shed, {res['violations']} memory violations)")
+        return
     res = serve(args.arch, requests=args.requests, batch=args.batch,
                 prompt_len=args.prompt_len, gen_len=args.gen_len,
                 num_devices=args.num_devices, workers=args.workers,
@@ -146,6 +246,8 @@ def main():
     print(f"[serve] {res['tokens_generated']} tokens in {res['wall_s']:.1f}s "
           f"({res['tokens_per_s']:.1f} tok/s, "
           f"batch latency {res['mean_batch_latency_s'] * 1e3:.0f} ms, "
+          f"TTFT p99 {res['p99_ttft_s'] * 1e3:.0f} ms, "
+          f"TPOT p99 {res['p99_tpot_s'] * 1e3:.0f} ms, "
           f"{res['deadlines_met']}/{res['batches']} deadlines met "
           f"({100 * res['deadline_met_rate']:.0f}%), "
           f"{res['shed']} shed, {res['preemptions']} preemption(s), "

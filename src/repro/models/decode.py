@@ -75,7 +75,9 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
 def decode_step(params: Params, cfg: ArchConfig, cache: Cache,
                 tokens: jax.Array, pos: jax.Array
                 ) -> Tuple[jax.Array, Cache]:
-    """tokens: [B] int32; pos: scalar int32 (current position, 0-based).
+    """tokens: [B] int32; pos: scalar int32 (current position, 0-based) or a
+    [B] vector when rows decode at independent positions (continuous
+    batching — see serve.engine).
 
     Returns (logits [B, V] f32, updated cache).
     """
@@ -170,3 +172,70 @@ def decode_step(params: Params, cfg: ArchConfig, cache: Cache,
     x = L.rms_norm(x, params["final_norm"])
     logits = logits_from_hidden(cfg, params, x[:, None])[:, 0]
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Slot-wise cache surgery (continuous batching)
+#
+# A running decode batch adopts a prefilled request's single-row cache and
+# retires finished rows in place: extract slices one row out, insert writes a
+# row back (right-padding the sequence axis so a short prefill cache drops
+# into a longer resident buffer; slots past the row's cache_len are masked by
+# decode_attention, so the zero padding is never attended).
+# ---------------------------------------------------------------------------
+
+# per-key (batch_axis, seq_axis or None) for every cache layout produced by
+# init_cache across the attn / ssm / hybrid families
+CACHE_AXES: Dict[str, Tuple[int, Any]] = {
+    "k": (1, 3), "v": (1, 3), "k_s": (1, 3), "v_s": (1, 3),
+    "conv": (1, None), "ssm": (1, None),
+    "m_conv": (2, None), "m_ssm": (2, None),
+}
+
+
+def cache_rows(cache: Cache) -> int:
+    """Batch capacity (number of resident rows) of a decode cache."""
+    key = next(iter(cache))
+    return cache[key].shape[CACHE_AXES[key][0]]
+
+
+def cache_extract(cache: Cache, row) -> Cache:
+    """Slice out one resident row as a batch-1 cache. ``row`` may be a
+    static int or a traced scalar."""
+    return {key: jax.lax.dynamic_slice_in_dim(t, row, 1,
+                                              axis=CACHE_AXES[key][0])
+            for key, t in cache.items()}
+
+
+def cache_insert(cache: Cache, row_cache: Cache, row) -> Cache:
+    """Write a batch-1 ``row_cache`` into resident slot ``row``.
+
+    The row cache's sequence axis may be SHORTER than the resident buffer's
+    (e.g. a prompt-length prefill cache joining a max_seq batch, or a
+    short-prompt ring): it is right-padded with zeros, which stay masked
+    until decode writes them. A LONGER sequence axis is an error — the
+    resident buffer cannot hold it.
+    """
+    out = {}
+    for key, t in cache.items():
+        bax, sax = CACHE_AXES[key]
+        rt = row_cache[key]
+        if sax is not None and rt.shape[sax] != t.shape[sax]:
+            if rt.shape[sax] > t.shape[sax]:
+                raise ValueError(
+                    f"cache_insert: row cache {key} seq {rt.shape[sax]} "
+                    f"exceeds resident buffer seq {t.shape[sax]}")
+            pad = [(0, 0)] * rt.ndim
+            pad[sax] = (0, t.shape[sax] - rt.shape[sax])
+            rt = jnp.pad(rt, pad)
+        out[key] = jax.lax.dynamic_update_slice_in_dim(
+            t, rt.astype(t.dtype), row, axis=bax)
+    return out
+
+
+def cache_clear_row(cache: Cache, row) -> Cache:
+    """Zero a retired row so stale KV bytes can't leak into a later adopt
+    (cheap hygiene; correctness never reads a masked slot)."""
+    zeros = {key: jnp.zeros_like(t) for key, t in cache_extract(
+        cache, 0 if isinstance(row, int) else row).items()}
+    return cache_insert(cache, zeros, row)

@@ -312,12 +312,28 @@ def flash_attention_cvjp(q, k, v, *, causal=True, window=0, logit_softcap=0.0,
     return fn(q, k, v, win)
 
 
+def _decode_valid_mask(smax, cache_len, window):
+    """[B or 1, Smax] bool mask of attendable cache slots. ``cache_len`` may
+    be a scalar (whole batch at one position — the classic decode loop) or a
+    per-row [B] vector (continuous batching: each resident request sits at
+    its own position)."""
+    cl = jnp.reshape(jnp.asarray(cache_len), (-1, 1))  # [B or 1, 1]
+    k_pos = jnp.arange(smax)[None, :]                  # [1, Smax]
+    valid = k_pos < cl
+    if window is not None:
+        w = jnp.asarray(window)
+        valid &= (w <= 0) | (k_pos >= cl - w)
+    return valid
+
+
 def decode_attention(q, k_cache, v_cache, cache_len, *, window=0,
                      logit_softcap=0.0):
     """One-token decode. q: [B, Hq, 1, D]; caches: [B, Hkv, Smax, D].
 
     ``cache_len`` is the number of valid cache entries (the new token's K/V
-    must already be written at position cache_len - 1).
+    must already be written at position cache_len - 1) — a scalar, or a [B]
+    vector when rows of a continuously-batched decode sit at different
+    sequence positions.
 
     GQA is contracted GROUPED — q reshaped to [B, Hkv, G, D] — so the KV
     cache is never materialized repeated to Hq heads, and the einsums read
@@ -333,12 +349,8 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=0,
     s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
     s = softcap(s, logit_softcap)
-    k_pos = jnp.arange(smax)
-    valid = k_pos < cache_len
-    if window is not None:
-        w = jnp.asarray(window)
-        valid &= (w <= 0) | (k_pos >= cache_len - w)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    valid = _decode_valid_mask(smax, cache_len, window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
@@ -381,12 +393,8 @@ def decode_attention_q8(q, k_q, k_s, v_q, v_s, cache_len, *, window=0,
                    preferred_element_type=jnp.float32)
     s = s * k_s[:, :, None, :].astype(jnp.float32) * scale
     s = softcap(s, logit_softcap)
-    k_pos = jnp.arange(smax)
-    valid = k_pos < cache_len
-    if window is not None:
-        w = jnp.asarray(window)
-        valid &= (w <= 0) | (k_pos >= cache_len - w)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    valid = _decode_valid_mask(smax, cache_len, window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     pv = (p * v_s[:, :, None, :].astype(jnp.float32)).astype(q.dtype)
     out = jnp.einsum("bhgk,bhkd->bhgd", pv, v_q.astype(q.dtype),

@@ -213,31 +213,46 @@ def attn_decode_block(p: Params, x: jax.Array, cfg: ArchConfig, *, pos,
                       kscale=None, vscale=None):
     """One-token attention. x: [B, 1, d]; caches: [B, Hkv, Smax, D].
 
+    ``pos`` is a scalar (whole batch at one sequence position) or a [B]
+    vector (continuous batching: every resident row at its own position —
+    the scalar path keeps the cheap contiguous dynamic_update_slice, the
+    vector path scatters one slot per row through a one-hot mask).
+
     When ``kscale``/``vscale`` are given the cache is int8 with
     per-(position, head) scales (cfg.kv_cache_dtype == "int8"). Returns
     (attn_out, updated-cache tuple) — (kc, vc) or (kc, vc, ks, vs).
     """
     q, k, v = _project_qkv(p, x)  # [B,H,1,hd]
-    posv = jnp.full((1,), 0, jnp.int32) + pos
-    q = L.apply_rope(q, posv[None, None, :], cfg.rope_theta)
-    k = L.apply_rope(k, posv[None, None, :], cfg.rope_theta)
+    per_row = jnp.ndim(pos) >= 1
+    b = x.shape[0]
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    q = L.apply_rope(q, posv[:, None, None], cfg.rope_theta)
+    k = L.apply_rope(k, posv[:, None, None], cfg.rope_theta)
     smax = kcache.shape[2]
-    slot = (pos % smax) if ring else jnp.minimum(pos, smax - 1)
-    cache_len = jnp.minimum(pos + 1, smax)
+    slot = (posv % smax) if ring else jnp.minimum(posv, smax - 1)  # [B]
+    cache_len = jnp.minimum((posv if per_row else pos) + 1, smax)
     win = 0 if ring else window  # ring enforces the window by overwrite
+
+    if per_row:
+        oh = jnp.arange(smax)[None, :] == slot[:, None]  # [B, Smax]
+
+        def write(cache, new):  # new: [B, H, 1, D] or [B, H, 1] (scales)
+            mask = oh[:, None, :, None] if cache.ndim == 4 else oh[:, None, :]
+            return jnp.where(mask, new.astype(cache.dtype), cache)
+    else:
+        def write(cache, new):
+            return jax.lax.dynamic_update_slice_in_dim(
+                cache, new.astype(cache.dtype), slot[0], axis=2)
+
     if kscale is not None:
         k_q, k_s = L.quantize_kv(k, kscale.dtype)
         v_q, v_s = L.quantize_kv(v, vscale.dtype)
         k_q = jax.lax.optimization_barrier(k_q)
         v_q = jax.lax.optimization_barrier(v_q)
-        kcache = jax.lax.dynamic_update_slice_in_dim(kcache, k_q, slot,
-                                                     axis=2)
-        vcache = jax.lax.dynamic_update_slice_in_dim(vcache, v_q, slot,
-                                                     axis=2)
-        kscale = jax.lax.dynamic_update_slice_in_dim(kscale, k_s, slot,
-                                                     axis=2)
-        vscale = jax.lax.dynamic_update_slice_in_dim(vscale, v_s, slot,
-                                                     axis=2)
+        kcache = write(kcache, k_q)
+        vcache = write(vcache, v_q)
+        kscale = write(kscale, k_s)
+        vscale = write(vscale, v_s)
         o = L.decode_attention_q8(q, kcache, kscale, vcache, vscale,
                                   cache_len, window=win,
                                   logit_softcap=cfg.attn_logit_softcap)
@@ -248,8 +263,8 @@ def attn_decode_block(p: Params, x: jax.Array, cfg: ArchConfig, *, pos,
     # the update instead (observed +20 GB/device at qwen decode_32k)
     k = jax.lax.optimization_barrier(k.astype(kcache.dtype))
     v = jax.lax.optimization_barrier(v.astype(vcache.dtype))
-    kcache = jax.lax.dynamic_update_slice_in_dim(kcache, k, slot, axis=2)
-    vcache = jax.lax.dynamic_update_slice_in_dim(vcache, v, slot, axis=2)
+    kcache = write(kcache, k)
+    vcache = write(vcache, v)
     o = L.decode_attention(q, kcache, vcache, cache_len, window=win,
                            logit_softcap=cfg.attn_logit_softcap)
     return jnp.einsum("bhsk,hkd->bsd", o, p["wo"]), (kcache, vcache)

@@ -38,10 +38,25 @@ def make_prefill_step(cfg: ArchConfig, *, attn_impl: str = "flash"):
             w = cfg.sliding_window
             s = hidden.shape[1]
             if s >= w:
+                # the last w positions land at ring slots (s-w+i) % w;
+                # rolling the tail by s % w puts position p at slot p % w,
+                # exactly where decode_step resumes writing (verified
+                # slot-by-slot against a pure-decode ring in tests)
                 tail = jax.tree_util.tree_map(
                     lambda t: jnp.roll(t[:, :, :, -w:], s % w, axis=3),
                     {"k": cache["k"], "v": cache["v"]})
                 cache = tail
+            else:
+                # ring not yet full: slots 0..s-1 already hold positions
+                # 0..s-1 (p % w == p for p < w) — but the ring MODULUS that
+                # decode_step uses is the cache's seq dim, so handing back an
+                # s-deep cache would wrap the ring at s instead of w. Pad to
+                # the full ring size; the empty slots are masked (cache_len)
+                # until decode writes them.
+                cache = jax.tree_util.tree_map(
+                    lambda t: jnp.pad(t, [(0, 0)] * 3 + [(0, w - s)]
+                                      + [(0, 0)] * (t.ndim - 4)),
+                    {"k": cache["k"], "v": cache["v"]})
         if cfg.kv_cache_dtype == "int8" and "k" in cache \
                 and cfg.family != "hybrid":
             from repro.models.layers import quantize_kv
@@ -68,7 +83,14 @@ def make_serve_step(cfg: ArchConfig):
 
 def greedy_generate(cfg: ArchConfig, params, cache, first_tokens, start_pos,
                     num_steps: int):
-    """Greedy generation loop (lax.scan over steps) for the examples."""
+    """Greedy generation loop (lax.scan over steps) for the examples.
+
+    ``num_steps=0`` (a gen_len-1 request) is a valid degenerate call and
+    returns an empty [B, 0] token block with the cache untouched.
+    """
+    if num_steps <= 0:
+        b = first_tokens.shape[0]
+        return jnp.zeros((b, 0), jnp.int32), cache
     serve = make_serve_step(cfg)
 
     def body(carry, _):

@@ -1,0 +1,385 @@
+"""Continuous-batching serving battery (ISSUE 7): the ServeEngine tentpole
+plus the serving-path bugfix regressions.
+
+  * ring-cache prefill/decode handoff parity — prefill-then-decode matches
+    pure step-by-step decode for S > window AND S < window (the S < w case
+    used to leave the cache seq dim at S, silently changing the ring
+    modulus under the decode loop);
+  * ``greedy_generate`` with ``gen_len=1`` (zero decode steps) returns a
+    [B, 0] token array instead of tracing a zero-length scan by accident;
+  * crashed-before-start ExecRecords carry the NEVER_STARTED sentinel (and
+    ``started`` False) on BOTH backends — a crash injected mid-run keeps
+    its real start stamp;
+  * launch/serve token accounting: padded rows of a ragged final batch are
+    not counted as served tokens;
+  * scheduler grow/shrink: bind_resident, budget/memory parking, EDF drain
+    order on retire, exact accounting after leaves, eviction settling
+    ``grown_now``;
+  * property: random join/leave sequences never violate device HBM or the
+    per-host row budget;
+  * live and sim backends admit the SAME slot-join order for the same
+    submission trace;
+  * engine end-to-end on a real model: per-request streamed tokens equal
+    the one-shot prefill + greedy_generate reference.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+
+from repro.configs.registry import get_arch
+from repro.core.cluster import Cluster, JobStatus
+from repro.core.executor import NEVER_STARTED, ExecJob
+from repro.core.scheduler import MGBAlg3Scheduler
+from repro.core.scheduler.base import DEADLINE_SHED
+from repro.core.task import Job, ResourceVector, Task, UnitTask
+from repro.models import decode as D
+from repro.models.model import init_params
+from repro.serve.decode import greedy_generate, make_prefill_step
+from repro.serve.engine import (
+    SLO, JaxModel, NullModel, RequestStatus, ServeEngine,
+)
+
+GB = 1024**3
+
+
+def vec(mem_gb=1.0, demand=0.25, est=0.01):
+    return ResourceVector(hbm_bytes=int(mem_gb * GB), flops=1e9,
+                          bytes_accessed=1e6, est_seconds=est,
+                          core_demand=demand, bw_demand=demand)
+
+
+def solo(name, mem_gb=1.0, demand=0.25, est=0.01, **kw):
+    return Task(units=[UnitTask(fn=None, memobjs=frozenset({name}),
+                                resources=vec(mem_gb, demand, est),
+                                name=name)], name=name, **kw)
+
+
+# ---------------------------------------------------------------------------
+# ring-cache prefill/decode handoff (satellite 1)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ring_setup():
+    # pure-SWA config; moe=None because top-k expert-routing discontinuity
+    # amplifies bf16 noise past any usable logit tolerance
+    cfg = dataclasses.replace(get_arch("mixtral-8x7b").reduced(),
+                              n_layers=2, sliding_window=8, moe=None)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.mark.parametrize("S", [13, 5, 8])  # > window, < window (the bug), ==
+def test_ring_prefill_decode_parity(ring_setup, S):
+    cfg, params = ring_setup
+    n_dec = 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab)
+    prefill = jax.jit(make_prefill_step(cfg, attn_impl="naive"))
+    logits_p, cache_p = prefill(params, {"tokens": toks})
+    # reference: pure decode from an empty ring, token by token
+    cache_r = D.init_cache(cfg, 1, S + n_dec + 1)
+    lg = None
+    for i in range(S):
+        lg, cache_r = D.decode_step(params, cfg, cache_r, toks[:, i], i)
+    nxt_p = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    nxt_r = jnp.argmax(lg, -1).astype(jnp.int32)
+    assert (nxt_p == nxt_r).all()
+    for j in range(n_dec):
+        lp, cache_p = D.decode_step(params, cfg, cache_p, nxt_p, S + j)
+        lr, cache_r = D.decode_step(params, cfg, cache_r, nxt_r, S + j)
+        assert float(jnp.abs(lp - lr).max()) < 0.1, (S, j)
+        nxt_p = jnp.argmax(lp, -1).astype(jnp.int32)
+        nxt_r = jnp.argmax(lr, -1).astype(jnp.int32)
+        assert (nxt_p == nxt_r).all(), (S, j)
+
+
+def test_greedy_generate_single_token(ring_setup):
+    cfg, params = ring_setup
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 4), 0, cfg.vocab)
+    prefill = jax.jit(make_prefill_step(cfg, attn_impl="naive"))
+    logits, cache = prefill(params, {"tokens": toks})
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+    out, cache2 = greedy_generate(cfg, params, cache, first, 4, 0)
+    assert out.shape == (2, 0)
+    assert jax.tree_util.tree_structure(cache2) \
+        == jax.tree_util.tree_structure(cache)
+
+
+# ---------------------------------------------------------------------------
+# crashed-task timing sentinel (satellite 2)
+# ---------------------------------------------------------------------------
+
+def _infeasible_job(name):
+    # more HBM than any device will ever have -> crashes before starting
+    return Job(tasks=[solo(name, mem_gb=10_000.0)], name=name)
+
+
+def test_never_started_sentinel_live():
+    c = Cluster(MGBAlg3Scheduler(1), workers=1)
+    h = c.submit(_infeasible_job("doomed"))
+    h.result()
+    c.shutdown()
+    assert h.status is JobStatus.CRASHED
+    (rec,) = h.records
+    assert rec.crashed
+    assert rec.t_start == NEVER_STARTED
+    assert not rec.started
+
+
+def test_never_started_sentinel_sim():
+    c = Cluster(MGBAlg3Scheduler(1), workers=1, backend="sim")
+    h = c.submit(_infeasible_job("doomed-sim"))
+    h.result()
+    assert h.status is JobStatus.CRASHED
+    (rec,) = h.records
+    assert rec.crashed
+    assert rec.t_start == NEVER_STARTED
+    assert not rec.started
+
+
+def test_midrun_crash_keeps_real_start():
+    c = Cluster(MGBAlg3Scheduler(1), workers=1)
+
+    def boom(device):
+        raise RuntimeError("injected kernel crash")
+
+    h = c.submit(ExecJob(job=Job(tasks=[solo("boom")], name="boom"),
+                         runners=[boom]))
+    h.result()
+    c.shutdown()
+    assert h.status is JobStatus.CRASHED
+    (rec,) = h.records
+    assert rec.crashed and rec.started
+    assert rec.t_start >= 0.0 and rec.t_end >= rec.t_start
+
+
+# ---------------------------------------------------------------------------
+# launch/serve token accounting (satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_serve_counts_only_real_rows():
+    from repro.launch.serve import serve
+    # 5 requests, batch 2 -> 3 batches, final one carries a padding row
+    res = serve("gemma2-9b", requests=5, batch=2, prompt_len=8, gen_len=2,
+                num_devices=1, deadline_s=600.0)
+    assert res["completed"] == 3
+    assert res["tokens_generated"] == 5 * 2  # NOT 3 * 2 * 2 = 12
+    assert res["p99_ttft_s"] > 0.0
+    assert res["p99_tpot_s"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# scheduler grow/shrink (tentpole substrate)
+# ---------------------------------------------------------------------------
+
+def _host(sched, dev, budget=2, mem_gb=2.0):
+    h = solo(f"loop{dev}", mem_gb=mem_gb, demand=0.5, slot_budget=budget)
+    assert sched.bind_resident(h, dev)
+    return h
+
+
+def test_bind_resident_checked():
+    s = MGBAlg3Scheduler(1, hbm_per_device=4 * GB)
+    h1 = solo("a", mem_gb=3.0, slot_budget=1)
+    assert s.bind_resident(h1, 0)
+    assert s.devices[0].used_hbm == 3 * GB
+    # second loop does not fit -> refused WITHOUT queueing
+    assert not s.bind_resident(solo("b", mem_gb=3.0), 0)
+    assert s.task_end(h1)
+    assert s.devices[0].used_hbm == 0
+
+
+def test_grow_parks_on_budget_and_memory():
+    s = MGBAlg3Scheduler(1, hbm_per_device=16 * GB)
+    host = _host(s, 0, budget=2)
+    got = []
+    cb = lambda t, p, e: got.append((t.name, p))
+    assert s.task_grow(solo("s1", mem_gb=1.0), [host], cb)
+    assert s.task_grow(solo("s2", mem_gb=1.0), [host], cb)
+    assert host.grown_now == 2
+    # budget full -> parks even though memory is plentiful
+    s3 = solo("s3", mem_gb=1.0)
+    assert not s.task_grow(s3, [host], cb)
+    assert [g for g in got if g[0] == "s3"] == []
+    # a retire drains the parked join onto the freed row
+    (t1,) = [t for t in s.devices[0].residents.values() if t.name == "s1"]
+    s.task_shrink(t1)
+    assert got[-1] == ("s3", 0)
+    assert host.grown_now == 2
+    # memory parking: budget free but bytes aren't
+    s4 = solo("s4", mem_gb=10_000.0)
+    assert not s.task_grow(s4, [host], cb)
+    assert s.devices[0].used_hbm <= s.devices[0].total_hbm
+
+
+def test_grow_edf_drain_order():
+    s = MGBAlg3Scheduler(1, hbm_per_device=16 * GB)
+    host = _host(s, 0, budget=1)
+    order = []
+    cb = lambda t, p, e: order.append(t.name)
+    first = solo("first", mem_gb=1.0)
+    assert s.task_grow(first, [host], cb)
+    # three parked joins, deadlines out of submission order
+    for name, dl in (("late", 30.0), ("early", 5.0), ("mid", 12.0)):
+        assert not s.task_grow(solo(name, mem_gb=1.0, deadline_t=dl),
+                               [host], cb)
+    s.task_shrink(first)          # frees exactly one row -> EDF winner
+    assert order == ["first", "early"]
+
+
+def test_grow_accounting_exact_after_leaves():
+    s = MGBAlg3Scheduler(2, hbm_per_device=16 * GB)
+    hosts = [_host(s, 0, budget=3), _host(s, 1, budget=3)]
+    base = [d.used_hbm for d in s.devices]
+    slots = []
+    for i in range(6):
+        t = solo(f"r{i}", mem_gb=1.5)
+        assert s.task_grow(t, hosts, lambda *a: None)
+        slots.append(t)
+    assert hosts[0].grown_now == 3 and hosts[1].grown_now == 3
+    for t in slots:
+        s.task_shrink(t)
+    assert hosts[0].grown_now == 0 and hosts[1].grown_now == 0
+    assert [d.used_hbm for d in s.devices] == base
+
+
+def test_eviction_settles_grown_now():
+    s = MGBAlg3Scheduler(2, hbm_per_device=16 * GB)
+    hosts = [_host(s, 0, budget=2), _host(s, 1, budget=2)]
+    results = []
+    t = solo("s", mem_gb=1.0)
+    assert s.task_grow(t, hosts, lambda tt, p, e: results.append(p))
+    victim_host = hosts[results[0]]
+    assert victim_host.grown_now == 1
+    s.mark_dead(results[0])
+    # release path settled the dead host's budget even though nothing called
+    # shrink; the evicted slot then RE-ADMITTED via eviction restart onto
+    # the surviving host (its callback fires again — serve.engine treats
+    # that re-admission as stale and shrinks it, since KV rows don't move)
+    assert victim_host.grown_now == 0
+    other = hosts[1 - results[0]]
+    assert len(results) == 2 and results[1] == other.device
+    assert t.placed_host is other and other.grown_now == 1
+    s.task_shrink(t)
+    assert other.grown_now == 0 and t.placed_host is None
+
+
+def test_grow_deadline_shed():
+    s = MGBAlg3Scheduler(1, hbm_per_device=16 * GB)
+    s.shed_expired = True
+    clock = [0.0]
+    s._clock = lambda: clock[0]
+    host = _host(s, 0, budget=1)
+    got = []
+    blocker = solo("blocker", mem_gb=1.0)
+    assert s.task_grow(blocker, [host], lambda *a: None)
+    assert not s.task_grow(solo("late", mem_gb=1.0, deadline_t=1.0),
+                           [host], lambda t, p, e: got.append(p))
+    clock[0] = 2.0                # deadline passes while parked
+    s.task_shrink(blocker)
+    assert got == [DEADLINE_SHED]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 5),
+                          st.integers(1, 40)), min_size=1, max_size=60),
+       st.integers(1, 4))
+def test_property_grow_never_violates_hbm(ops, budget):
+    """Random join/leave interleavings: admitted slot deltas never push any
+    device past its HBM, and per-host rows never exceed the budget."""
+    s = MGBAlg3Scheduler(2, hbm_per_device=8 * GB)
+    hosts = [_host(s, d, budget=budget, mem_gb=1.0) for d in range(2)]
+    live, k = [], 0
+    for is_leave, idx, tenths in ops:
+        if is_leave and live:
+            s.task_shrink(live.pop(idx % len(live)))
+        else:
+            t = solo(f"g{k}", mem_gb=tenths / 10.0)
+            k += 1
+            s.task_grow(t, hosts, lambda *a: None)
+            if t.device is not None:
+                live.append(t)
+        for d in s.devices:
+            assert d.used_hbm <= d.total_hbm
+        for h in hosts:
+            assert 0 <= h.grown_now <= budget
+
+
+# ---------------------------------------------------------------------------
+# engine: live/sim parity + end-to-end
+# ---------------------------------------------------------------------------
+
+GENS = (7, 3, 5, 2, 4, 6)
+
+
+def _run_trace(backend):
+    sched = MGBAlg3Scheduler(2, hbm_per_device=16 * GB)
+    c = Cluster(sched, workers=1, backend=backend)
+    model = NullModel(prefill_s=0.01, step_s=0.01)
+    eng = ServeEngine(c, model, max_batch=2,
+                      slo=SLO(ttft_s=600.0, tpot_s=600.0))
+    reqs = [eng.submit(prompt_len=8, gen_len=g) for g in GENS]
+    eng.drain(timeout_s=120.0)
+    rid_to_idx = {r.rid: i for i, r in enumerate(reqs)}
+    joins = [(rid_to_idx[rid], dev) for rid, dev in eng.join_log]
+    if backend == "live":
+        c.shutdown()
+    return reqs, joins
+
+
+def test_live_sim_slot_admission_parity():
+    live_reqs, live_joins = _run_trace("live")
+    sim_reqs, sim_joins = _run_trace("sim")
+    assert all(r.status is RequestStatus.DONE for r in live_reqs + sim_reqs)
+    assert all(r.n_tokens == r.gen_len for r in live_reqs + sim_reqs)
+    # identical slot-admission order (request index, device) on both
+    # backends: same prefill completion order (1 worker), same EDF ranking
+    # of parked joins, same least-loaded host choice
+    assert live_joins == sim_joins
+
+
+def test_engine_saturation_parks_and_completes():
+    sched = MGBAlg3Scheduler(1, hbm_per_device=8 * GB)
+    c = Cluster(sched, workers=64, backend="sim")
+    model = NullModel(loop_hbm=2 * GB, slot_hbm=2 * GB,
+                      prefill_hbm=GB // 2, prefill_s=0.01, step_s=0.01)
+    eng = ServeEngine(c, model, max_batch=2, slo=SLO(600.0, 600.0))
+    reqs = [eng.submit(prompt_len=8, gen_len=5) for _ in range(8)]
+    eng.drain(timeout_s=120.0)
+    assert all(r.status is RequestStatus.DONE for r in reqs)
+    assert eng.violations == 0
+    eng.shutdown()
+    assert sched.devices[0].used_hbm == 0
+
+
+def test_engine_e2e_matches_reference():
+    cfg = dataclasses.replace(get_arch("gemma2-9b").reduced(), n_layers=1)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_seq = 24
+    model = JaxModel(cfg, params, max_batch=2, max_seq=max_seq,
+                     attn_impl="naive")
+    assert model.slot_bytes > 0
+    c = Cluster(MGBAlg3Scheduler(1, hbm_per_device=64 * GB), workers=2)
+    eng = ServeEngine(c, model, max_batch=2, slo=SLO(600.0, 600.0))
+    rng = np.random.default_rng(0)
+    prompts = [jnp.asarray(rng.integers(0, cfg.vocab, (1, s)), jnp.int32)
+               for s in (6, 9, 4)]
+    gens = [5, 3, 1]
+    reqs = [eng.submit(prompt=p, gen_len=g) for p, g in zip(prompts, gens)]
+    eng.drain(timeout_s=300.0)
+    prefill = jax.jit(make_prefill_step(cfg, attn_impl="naive"))
+    for p, g, r in zip(prompts, gens, reqs):
+        assert r.status is RequestStatus.DONE, (r.status, r.error)
+        logits, cache = prefill(params, {"tokens": p})
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
+        big = D.cache_insert(D.init_cache(cfg, 1, max_seq), cache, 0)
+        toks, _ = greedy_generate(cfg, params, big, first,
+                                  jnp.asarray([p.shape[1]], jnp.int32),
+                                  g - 1)
+        ref = [int(first[0])] + [int(t) for t in np.asarray(toks)[0]]
+        assert r.tokens == ref, (r.rid, r.tokens, ref)
+    c.shutdown()
