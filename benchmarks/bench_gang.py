@@ -65,15 +65,17 @@ def run_scenario(batches: Sequence[List[Job]], arrivals: Sequence[float],
         # fragmentation probe: the highest-ranked parked GANG, if any —
         # memory is the only hard per-member constraint, so "k member-
         # feasible chips exist yet the gang is parked" isolates contiguity
-        # (fragmentation) from raw capacity shortage
-        gangs = [t for t in sched.waiting_tasks() if t.resources.chips > 1]
-        if not gangs:
+        # (fragmentation) from raw capacity shortage. queue_stats' gang_front
+        # peeks per class instead of snapshotting the whole queue — this
+        # probe runs at EVERY sim event, and waiting_tasks() is the
+        # O(n log n) full-queue sort base.py warns against in hot loops
+        gf = sched.queue_stats()["gang_front"]
+        if gf is None:
             return
-        r = gangs[0].resources
-        per_chip = r.hbm_bytes // r.chips
+        chips, per_chip = gf
         feasible = sum(1 for d in sched.devices
                        if d.alive and per_chip <= d.free_hbm)
-        frag.append(1.0 if feasible >= r.chips else 0.0)
+        frag.append(1.0 if feasible >= chips else 0.0)
 
     for batch, t in zip(batches, arrivals):
         sim.run_until(t)

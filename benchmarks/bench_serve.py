@@ -39,6 +39,7 @@ from benchmarks.common import save_json
 from repro.core.cluster import Cluster, JobStatus
 from repro.core.scheduler import MGBAlg3Scheduler
 from repro.core.task import Job, ResourceVector, Task, UnitTask
+from repro.obs.export import trace_summary
 from repro.serve.engine import SLO, NullModel, ServeEngine
 
 GB = 1024**3
@@ -81,10 +82,32 @@ def _summary(name: str, ttfts, tpots, good, done, total, span_s, violations):
     }
 
 
+def _failover_drill(cluster: Cluster) -> None:
+    """Post-serve epilogue on the traced cluster: one long job lands on a
+    device, the device dies mid-run, the evicted job resumes on a
+    survivor — the park→admit→evict→requeue→re-admit arc whose
+    cross-device flow the exported trace must contain."""
+    t0 = cluster.now
+    vec = ResourceVector(hbm_bytes=10 * GB, flops=0.0, bytes_accessed=0.0,
+                         est_seconds=4.0, core_demand=0.5, bw_demand=0.5)
+    task = Task(units=[UnitTask(fn=None, memobjs=frozenset({"victim"}),
+                                resources=vec, name="failover/victim")],
+                name="failover/victim")
+    cluster.submit(Job(tasks=[task], name="failover/victim"))
+    cluster.run_until(t0 + 1.0)
+    dead = task.device
+    assert dead is not None, "failover victim never started"
+    cluster.sched.mark_dead(dead)       # evict → requeue → re-admit
+    cluster.run_until(t0 + 3.0)         # resumes on a surviving device
+    cluster.sched.revive(dead)
+    cluster.drain()
+
+
 def run_continuous(trace, *, devices: int, max_batch: int, slo: SLO,
-                   seed: int = 0) -> Dict:
+                   seed: int = 0, trace_path: str = None) -> Dict:
     sched = MGBAlg3Scheduler(devices, hbm_per_device=16 * GB)
-    cluster = Cluster(sched, workers=256, backend="sim")
+    cluster = Cluster(sched, workers=256, backend="sim",
+                      trace=bool(trace_path))
     model = NullModel(loop_hbm=LOOP_HBM, slot_hbm=SLOT_HBM,
                       prefill_hbm=PREFILL_HBM, prefill_s=PREFILL_S,
                       step_s=STEP_S)
@@ -105,6 +128,17 @@ def run_continuous(trace, *, devices: int, max_batch: int, slo: SLO,
     out["shed"] = m["shed"]
     out["failed"] = m["failed"]
     eng.shutdown()
+    if trace_path:
+        _failover_drill(cluster)
+        doc = cluster.export_trace(trace_path)
+        s = trace_summary(doc)
+        # the trace the CI uploads must actually show the fleet: device
+        # occupancy tracks plus the drill's cross-device migration flow
+        assert s["slices"] > 0 and len(s["devices"]) >= 2, s
+        assert s["cross_device_flows"] >= 1, s
+        print(f"  trace -> {trace_path}: {s['slices']} slices on devices "
+              f"{s['devices']}, {s['flows']} flow(s) "
+              f"({s['cross_device_flows']} cross-device)")
     return out
 
 
@@ -157,7 +191,7 @@ def run_static(trace, *, devices: int, batch: int, slo: SLO) -> Dict:
                     violations)
 
 
-def run(seed: int = 0, smoke: bool = False) -> Dict:
+def run(seed: int = 0, smoke: bool = False, trace_path: str = None) -> Dict:
     if smoke:
         devices, max_batch, rate, horizon = 2, 4, 12.0, 4.0
     else:
@@ -165,7 +199,7 @@ def run(seed: int = 0, smoke: bool = False) -> Dict:
     slo = SLO(ttft_s=1.0, tpot_s=0.1)
     trace = _trace(rate, horizon, seed)
     cont = run_continuous(trace, devices=devices, max_batch=max_batch,
-                          slo=slo, seed=seed)
+                          slo=slo, seed=seed, trace_path=trace_path)
     stat = run_static(trace, devices=devices, batch=max_batch, slo=slo)
     for m in (cont, stat):
         print(f"  {m['mode']:10s} done {m['done']}/{m['requests']:4d}  "
@@ -196,8 +230,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="record the continuous run's lifecycle events and "
+                         "write a Chrome/Perfetto trace-event JSON (with a "
+                         "device-failover epilogue so the trace carries a "
+                         "cross-device migration flow)")
     args = ap.parse_args()
-    run(seed=args.seed, smoke=args.smoke)
+    run(seed=args.seed, smoke=args.smoke, trace_path=args.trace)
 
 
 if __name__ == "__main__":

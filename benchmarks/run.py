@@ -10,9 +10,10 @@ import argparse
 import time
 
 from benchmarks import (
-    bench_executor, bench_gang, bench_preempt, bench_sched_scale,
-    bench_serve, fig4_alg2_vs_alg3, fig5_throughput, fig6_nn_schedgpu,
-    kernels_bench, table2_crashes, table3_turnaround, table4_slowdown,
+    bench_executor, bench_gang, bench_obs, bench_preempt,
+    bench_sched_scale, bench_serve, fig4_alg2_vs_alg3, fig5_throughput,
+    fig6_nn_schedgpu, kernels_bench, table2_crashes, table3_turnaround,
+    table4_slowdown,
 )
 
 EXPERIMENTS = {
@@ -28,12 +29,13 @@ EXPERIMENTS = {
     "preempt": bench_preempt.run,
     "sched_scale": bench_sched_scale.run,
     "serve": bench_serve.run,
+    "obs": bench_obs.run,
 }
 
 # experiments whose run() takes smoke= (tiny inputs, assert-only, no JSON);
 # --smoke forwards to these and leaves the rest at full size
-SMOKE_CAPABLE = frozenset({"executor", "gang", "preempt", "sched_scale",
-                           "serve"})
+SMOKE_CAPABLE = frozenset({"executor", "gang", "obs", "preempt",
+                           "sched_scale", "serve"})
 
 
 def main() -> None:

@@ -48,6 +48,9 @@ from repro.core.scheduler.base import Scheduler
 from repro.core.scheduler.preempt import PreemptionMixin
 from repro.core.simulator import Simulator, _JobState
 from repro.core.task import Job
+from repro.obs.events import Tracer, attach_tracer
+from repro.obs.export import write_chrome_trace
+from repro.obs.replay import FlightRecorder
 
 
 class JobStatus(enum.Enum):
@@ -136,7 +139,9 @@ class Cluster:
                  backend: str = "live",
                  devices: Optional[Sequence[object]] = None,
                  poll_interval: float = 0.05, crash_delay: float = 8.0,
-                 shed_late: bool = False, preempt: Optional[bool] = None):
+                 shed_late: bool = False, preempt: Optional[bool] = None,
+                 trace: Union[None, bool, Tracer] = None,
+                 flight_path: Optional[str] = None):
         self.sched = scheduler
         self.backend = backend
         # deadline enforcement (the shedding half): a parked waiter whose
@@ -176,6 +181,18 @@ class Cluster:
         else:
             raise ValueError(f"unknown backend {backend!r} "
                              "(expected 'live' or 'sim')")
+        # event-sourced telemetry (repro.obs): trace=True builds a default
+        # Tracer, or pass a pre-sized one. Attached AFTER backend
+        # construction — attach_tracer binds the tracer's clock to the
+        # scheduler's _clock late, so it follows the sim's virtual-clock
+        # repointing (and the live backend's wall-monotonic restore) above
+        self.trace: Optional[Tracer] = None
+        self.flight: Optional[FlightRecorder] = None
+        if trace:
+            self.trace = trace if isinstance(trace, Tracer) else Tracer()
+            attach_tracer(scheduler, self.trace)
+            if flight_path is not None:
+                self.flight = FlightRecorder(self.trace, flight_path)
         self.handles: List[JobHandle] = []
         # scheduler counters are lifetime totals; snapshot them so a cluster
         # built over a reused scheduler reports only its own activity
@@ -273,6 +290,9 @@ class Cluster:
             else:
                 self._n_done += 1
                 self._turnaround_sum += job.finish_t - job.arrival_t
+        if self.flight is not None and job.crashed \
+                and not state.cancelled and not state.shed:
+            self.flight.dump("crash")
 
     @staticmethod
     def _as_execjob(job: Union[Job, ExecJob],
@@ -304,6 +324,8 @@ class Cluster:
             self._ex.drain()
         else:
             self._sim_drain_checked()
+        if self.flight is not None:
+            self.flight.dump("drain", always=True)
 
     def _sim_drain_checked(self) -> None:
         res = self._sim.drain()
@@ -339,6 +361,15 @@ class Cluster:
             self._ex.shutdown()
         else:
             self._sim_drain_checked()
+
+    def export_trace(self, path: str) -> Dict:
+        """Write the tracer's event window as a Chrome/Perfetto trace-event
+        JSON (chrome://tracing or https://ui.perfetto.dev) and return the
+        document. Requires the cluster to have been built with ``trace=``."""
+        if self.trace is None:
+            raise RuntimeError("Cluster was built without trace= — pass "
+                               "trace=True (or a Tracer) to enable telemetry")
+        return write_chrome_trace(self.trace.events(), path)
 
     def __enter__(self) -> "Cluster":
         return self

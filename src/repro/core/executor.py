@@ -50,6 +50,7 @@ from repro.core import lazy
 from repro.core.scheduler.base import DEADLINE_SHED, Scheduler
 from repro.core.task import Job, Task
 from repro.core.topology import placement_devices
+from repro.obs import events as obs
 
 
 class OOMError(RuntimeError):
@@ -373,11 +374,20 @@ class Executor:
         task = jr.ej.job.tasks[idx]
         self._jr_by_uid[task.uid] = jr
         jr.t_queue = time.monotonic()
+        # read at emit time (attach_tracer may run after construction);
+        # this path is per-task, not per-admission — not hot
+        tr = getattr(self.sched, "_trace", None)
+        if tr is not None:
+            tr.emit(obs.SUBMIT, task.uid, task.name,
+                    data={"job": jr.ej.job.name})
         if not self.sched.can_ever_fit(task):
             # never feasible on any alive device (or, for a gang, no
             # feasible device-group shape): crash-at-submit with the
             # scheduler's explanation instead of waiting forever
             jr.ej.job.error = self.sched.infeasible_reason(task)
+            if tr is not None:
+                tr.emit(obs.CRASH, task.uid, task.name,
+                        data={"reason": "infeasible"})
             self._record(jr, ExecRecord(
                 jr.ej.job.name, task.name, -1, jr.t_queue, NEVER_STARTED,
                 time.monotonic(), crashed=True))
@@ -418,6 +428,10 @@ class Executor:
         # incarnation owns this task now — drop the stale work item
         if self.sched.admission_epoch(task) != item.epoch:
             return
+        tr = getattr(self.sched, "_trace", None)
+        if tr is not None:
+            tr.emit(obs.DISPATCH, task.uid, task.name, lead, item.epoch,
+                    data={"chips": len(devs)})
         if jr.cancel_requested:
             # cancelled between admission and execution: release the
             # admission (it holds the whole reservation) and end the job
@@ -430,6 +444,11 @@ class Executor:
         if any(self.sched.devices[d].oom() for d in devs):
             if not self.sched.task_end(task, epoch=item.epoch):
                 return  # fenced: evicted + re-admitted elsewhere mid-check
+            if tr is not None:
+                # after task_end's END: the resources WERE released before
+                # the crash was recorded (the tolerated DONE->DEAD arc)
+                tr.emit(obs.CRASH, task.uid, task.name, lead, item.epoch,
+                        data={"reason": "oom"})
             self._record(jr, ExecRecord(
                 jr.ej.job.name, task.name, lead, jr.t_queue, NEVER_STARTED,
                 time.monotonic(), crashed=True, gang_chips=len(devs)))
@@ -460,6 +479,9 @@ class Executor:
                 # this attempt's record
                 t_start = time.monotonic()
                 jr.started = True
+                if tr is not None:
+                    tr.emit(obs.BEGIN, task.uid, task.name, lead,
+                            item.epoch)
                 try:
                     # lazy runtime: replay buffer queues on the gang's lead
                     # device, then launch the task's unit group as ONE bound
@@ -489,6 +511,9 @@ class Executor:
         if not current:
             return
         if crashed:
+            if tr is not None:
+                tr.emit(obs.CRASH, task.uid, task.name, lead, item.epoch,
+                        data={"reason": "runner"})
             now = time.monotonic()
             self._record(jr, ExecRecord(
                 jr.ej.job.name, task.name, lead, jr.t_queue,

@@ -63,6 +63,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.task import Task
+from repro.obs import events as obs
 
 # 16 GB v5e HBM per chip (the paper's P100/V100 also had 16 GB)
 DEFAULT_HBM = 16 * 1024**3
@@ -319,6 +320,13 @@ class WaiterQueueMixin:
         # proved the freed capacity cannot satisfy them (observability for
         # the heterogeneous-queue benchmarks/tests)
         self.hint_skips = 0
+        # lifecycle event tracer (obs.events.attach_tracer sets it): None
+        # keeps every emission site a single attribute load, so the traced-
+        # off hot path pays nothing. _trace_dev_off maps shard-local device
+        # indices to fleet-global ones in emitted events (sharded control
+        # plane stamps each shard's base; 0 everywhere else).
+        self._trace: Optional[obs.Tracer] = None
+        self._trace_dev_off = 0
 
     @staticmethod
     def _class_key(task: Task) -> Any:
@@ -352,6 +360,11 @@ class WaiterQueueMixin:
                     vec=self._class_key(task))
         w.sort_key = w.key
         self._queue.add(w)
+        tr = self._trace
+        if tr is not None:
+            tr.emit(obs.REQUEUE if restart else obs.PARK,
+                    task.uid, task.name,
+                    epoch=self._epochs.get(task.uid, 0))
         return w
 
     def _restore_waiter_locked(self, w: _Waiter) -> None:
@@ -529,6 +542,10 @@ class WaiterQueueMixin:
                             key=lambda w: w.sort_key):
                 self._admit_cbs.pop(w.task.uid, None)
                 self._forget_task_locked(w.task)
+                tr = self._trace
+                if tr is not None:
+                    tr.emit(obs.SHED, w.task.uid, w.task.name,
+                            epoch=self._epochs.get(w.task.uid, 0))
                 fired.append((w, DEADLINE_SHED,
                               self._epochs.get(w.task.uid, 0)))
         if not len(q):
@@ -598,6 +615,10 @@ class WaiterQueueMixin:
                 # too late to be worth running: shed instead of admitting
                 self._admit_cbs.pop(w.task.uid, None)
                 self._forget_task_locked(w.task)
+                tr = self._trace
+                if tr is not None:
+                    tr.emit(obs.SHED, w.task.uid, w.task.name,
+                            epoch=self._epochs.get(w.task.uid, 0))
                 fired.append((w, DEADLINE_SHED,
                               self._epochs.get(w.task.uid, 0)))
                 continue
@@ -684,17 +705,34 @@ class WaiterQueueMixin:
             return len(self._queue)
 
     def queue_stats(self) -> Dict[str, Any]:
-        """O(1) waiter-queue snapshot from maintained counters — safe to
+        """Waiter-queue snapshot from maintained counters — safe to
         poll at depth 1e5 without stalling admission under the lock:
         ``depth`` (total waiters), ``per_class`` (waiters per admission
         priority class, aging included), ``classes`` (distinct resource
-        vectors parked), ``hint_skips`` (probe-free skips to date)."""
+        vectors parked), ``hint_skips`` (probe-free skips to date), and
+        ``gang_front`` — the best-ranked parked multi-chip waiter as
+        ``(chips, per_chip_hbm)`` or None. Everything but gang_front is
+        O(1); gang_front is O(classes · log) via per-class heap peeks —
+        never a sort over the waiters (the ``waiting_tasks`` trap)."""
         with self._lock:
+            gang_front = None
+            best = None
+            for vec in self._queue.classes():
+                # grow-task classes key as (vector, host uids): unwrap
+                r = vec[0] if isinstance(vec, tuple) else vec
+                chips = getattr(r, "chips", 1)
+                if chips <= 1:
+                    continue
+                peek = self._queue.peek_class(vec)
+                if peek is not None and (best is None or peek[0] < best):
+                    best = peek[0]
+                    gang_front = (chips, r.hbm_bytes // chips)
             return {
                 "depth": len(self._queue),
                 "per_class": self._queue.class_depth_snapshot(),
                 "classes": len(self._queue.classes()),
                 "hint_skips": self.hint_skips,
+                "gang_front": gang_front,
             }
 
     def waiting_tasks(self) -> List[Task]:
@@ -772,6 +810,11 @@ class WaiterQueueMixin:
                 q.discard(w.task.uid)
                 self._admit_cbs.pop(w.task.uid, None)
                 self._forget_task_locked(w.task)
+                tr = self._trace
+                if tr is not None:
+                    tr.emit(obs.CRASH, w.task.uid, w.task.name,
+                            epoch=self._epochs.get(w.task.uid, 0),
+                            data={"reason": "infeasible"})
                 failed.append((w, None, self._epochs.get(w.task.uid, 0)))
         failed.sort(key=lambda e: e[0].sort_key)  # fire in rank order
         return failed
@@ -873,6 +916,11 @@ class Scheduler(WaiterQueueMixin):
         dev.admit(task)
         task.device = dev.index
         self.placements.append((task.uid, dev.index))
+        tr = self._trace
+        if tr is not None:
+            tr.emit(obs.ADMIT, task.uid, task.name,
+                    dev.index + self._trace_dev_off,
+                    self._epochs.get(task.uid, 0))
         return dev.index
 
     def _grow_feasible_locked(self, task: Task,
@@ -920,6 +968,12 @@ class Scheduler(WaiterQueueMixin):
         task.placed_host = host
         host.grown_now += 1
         self.placements.append((task.uid, dev.index))
+        tr = self._trace
+        if tr is not None:
+            tr.emit(obs.GROW, task.uid, task.name,
+                    dev.index + self._trace_dev_off,
+                    self._epochs.get(task.uid, 0),
+                    data={"host": host.uid})
         return dev.index
 
     def can_ever_fit(self, task: Task) -> bool:
@@ -963,6 +1017,15 @@ class Scheduler(WaiterQueueMixin):
             if freed is not None:
                 self.devices[freed].release(task)
             self._admit_cbs.pop(task.uid, None)
+            tr = self._trace
+            if tr is not None and freed is not None:
+                # freed None = a stale end for an already-evicted run (the
+                # eviction cleared task.device): nothing was released, so
+                # nothing is emitted — the fresh incarnation owns the task
+                tr.emit(obs.SHRINK if task.grow_hosts else obs.END,
+                        task.uid, task.name,
+                        freed + self._trace_dev_off,
+                        self._epochs.get(task.uid, 0))
             fired = self._drain_locked(freed=freed)
         self._fire(fired)
         return True
@@ -984,6 +1047,12 @@ class Scheduler(WaiterQueueMixin):
             dev.admit(task)
             task.device = dev.index
             self.placements.append((task.uid, dev.index))
+            tr = self._trace
+            if tr is not None:
+                tr.emit(obs.ADMIT, task.uid, task.name,
+                        dev.index + self._trace_dev_off,
+                        self._epochs.get(task.uid, 0),
+                        data={"bind": True})
             return True
 
     def task_grow(self, slot_task: Task, hosts: Sequence[Task],
@@ -1018,6 +1087,14 @@ class Scheduler(WaiterQueueMixin):
             dev.alive = False
             self._refresh_capacity_locked()
             evicted = list(dev.residents.values())
+            tr = self._trace
+            if tr is not None:
+                off = self._trace_dev_off
+                tr.emit(obs.MARK_DEAD, device=device_index + off)
+                for t in evicted:
+                    tr.emit(obs.EVICT, t.uid, t.name, device_index + off,
+                            self._epochs.get(t.uid, 0),
+                            data={"cause": "device_dead"})
             for t in evicted:
                 dev.release(t)
                 t.device = None
@@ -1031,6 +1108,10 @@ class Scheduler(WaiterQueueMixin):
         with self._lock:
             self.devices[device_index].alive = True
             self._refresh_capacity_locked()
+            tr = self._trace
+            if tr is not None:
+                tr.emit(obs.REVIVE,
+                        device=device_index + self._trace_dev_off)
             # only the revived device changed: hint the drain at it
             fired = self._drain_locked(freed=device_index)
         self._fire(fired)

@@ -46,6 +46,7 @@ from repro.core.task import Task
 from repro.core.topology import (
     DCN_BW, ICI_BW, Cell, GangReservation, Topology,
 )
+from repro.obs import events as obs
 
 CellOrIndex = Union[Cell, int]
 
@@ -211,6 +212,16 @@ class GangScheduler(WaiterQueueMixin):
             return None
         self._reserve_group_locked(task, group)
         self.placements.append((task.uid, group.lead))
+        tr = self._trace
+        if tr is not None:
+            off = self._trace_dev_off
+            tr.emit(obs.ADMIT, task.uid, task.name, group.lead + off,
+                    self._epochs.get(task.uid, 0))
+            if max(task.resources.chips, 1) > 1:
+                tr.emit(obs.GANG_RESERVE, task.uid, task.name,
+                        group.lead + off, self._epochs.get(task.uid, 0),
+                        data={"devices": tuple(
+                            d + off for d in group.device_indices)})
         return group
 
     def _reserve_group_locked(self, task: Task,
@@ -265,6 +276,15 @@ class GangScheduler(WaiterQueueMixin):
                 return False
             group = self._release_locked(task)
             self._admit_cbs.pop(task.uid, None)
+            tr = self._trace
+            if tr is not None and group is not None:
+                off = self._trace_dev_off
+                epoch = self._epochs.get(task.uid, 0)
+                if max(task.resources.chips, 1) > 1:
+                    tr.emit(obs.GANG_RELEASE, task.uid, task.name,
+                            group.lead + off, epoch)
+                tr.emit(obs.END, task.uid, task.name,
+                        group.lead + off, epoch)
             freed = tuple(group.cells()) if group is not None else None
             fired = self._drain_locked(freed=freed)
         self._fire(fired)
@@ -289,6 +309,11 @@ class GangScheduler(WaiterQueueMixin):
         cell = self._as_cell(cell)
         with self._lock:
             self.topo.set_alive(cell, False)
+            tr = self._trace
+            off = self._trace_dev_off
+            if tr is not None:
+                tr.emit(obs.MARK_DEAD,
+                        device=self.topo.cells[cell].index + off)
             evicted: List[Task] = []
             for uid, group in list(self.bound.items()):
                 if cell not in set(group.cells()):
@@ -298,6 +323,17 @@ class GangScheduler(WaiterQueueMixin):
                     task = self.topo.cells[c2].residents.get(uid)
                     if task is not None:
                         break
+                if tr is not None:
+                    tr.emit(obs.EVICT, task.uid, task.name,
+                            group.lead + off,
+                            self._epochs.get(task.uid, 0),
+                            data={"cause": "device_dead"})
+                    if max(task.resources.chips, 1) > 1:
+                        # whole-gang eviction releases the reservation too:
+                        # reserve/release must pair across every exit path
+                        tr.emit(obs.GANG_RELEASE, task.uid, task.name,
+                                group.lead + off,
+                                self._epochs.get(task.uid, 0))
                 self._release_locked(task)
                 task.device = None
                 evicted.append(task)
@@ -311,6 +347,10 @@ class GangScheduler(WaiterQueueMixin):
         cell = self._as_cell(cell)
         with self._lock:
             self.topo.set_alive(cell, True)
+            tr = self._trace
+            if tr is not None:
+                tr.emit(obs.REVIVE, device=self.topo.cells[cell].index
+                        + self._trace_dev_off)
             fired = self._drain_locked(freed=(cell,))
         self._fire(fired)
 

@@ -50,6 +50,7 @@ from repro.core.scheduler.gang import GangScheduler
 from repro.core.scheduler.mgb import MGBAlg2Scheduler, MGBAlg3Scheduler
 from repro.core.scheduler.base import slots_needed
 from repro.core.task import Task
+from repro.obs import events as obs
 
 # a preemption notice batch: (evicted task, its SUPERSEDED admission epoch)
 # in eviction order. The epoch lets a backend reject a late-delivered notice
@@ -286,6 +287,15 @@ class PreemptionMixin:
             self._evicted_from[v.uid] = self._tok_lead(tok)
             self.preemptions += 1
             self.preempt_log.append((v.uid, task.uid))
+            tr = self._trace
+            if tr is not None:
+                # fires after the preemptor's ADMIT (emitted inside
+                # _admit_locked above) — the same order on both backends,
+                # and per-victim lifecycle legality is unaffected
+                tr.emit(obs.EVICT, v.uid, v.name,
+                        self._tok_lead(tok) + self._trace_dev_off,
+                        self._epochs.get(v.uid, 0),
+                        data={"by": task.uid, "cause": "preempt"})
         # capture each victim's pre-bump epoch BEFORE the requeue bumps it:
         # the notice is addressed to that superseded attempt only
         note = [(v, self._epochs.get(v.uid, 0)) for v in plan]

@@ -57,6 +57,7 @@ from repro.core.scheduler.base import (
 from repro.core.scheduler.gang import GangScheduler
 from repro.core.task import Task
 from repro.core.topology import DCN_BW, ICI_BW, Cell, GangReservation
+from repro.obs import events as obs
 
 DeviceRef = Union[int, Cell]
 
@@ -108,6 +109,10 @@ class ShardedScheduler:
         self.steals = 0          # waiters successfully re-homed by stealing
         self.steal_attempts = 0  # steal probes (including refused ones)
         self.rehomes = 0         # waiters migrated off a shrunken shard
+        # wrapper-level tracer (steal/restore events); obs.events.
+        # attach_tracer also fans the tracer out to every shard with its
+        # global device-index offset
+        self._trace = None
 
     # -- global views ---------------------------------------------------------
     @property
@@ -300,6 +305,12 @@ class ShardedScheduler:
             if w is None:
                 return
             self.steal_attempts += 1
+            tr = self._trace
+            if tr is not None:
+                # STEAL precedes the target's ADMIT (emitted inside its
+                # try_admit) so the lifecycle reads park -> steal -> admit
+                tr.emit(obs.STEAL, w.task.uid, w.task.name,
+                        data={"src": src_si, "dst": target_si})
             # fence transfer BEFORE the admit: the waiter may be an eviction
             # restart whose superseded run is still in flight — its stale
             # task_end must keep failing on the new owner too
@@ -311,6 +322,9 @@ class ShardedScheduler:
                     self._owner[w.task.uid] = src_si
                 source.adopt_epoch(w.task, target.admission_epoch(w.task))
                 source.restore_waiter(w)
+                if tr is not None:
+                    tr.emit(obs.RESTORE, w.task.uid, w.task.name,
+                            data={"src": src_si, "dst": target_si})
                 return
             self.steals += 1
 
@@ -348,6 +362,7 @@ class ShardedScheduler:
         classes = 0
         per_class: Dict[int, int] = {}
         per_shard: List[int] = []
+        gang_front = None
         for sh in self.shards:
             s = sh.queue_stats()
             depth += s["depth"]
@@ -355,9 +370,11 @@ class ShardedScheduler:
             per_shard.append(s["depth"])
             for k, v in s["per_class"].items():
                 per_class[k] = per_class.get(k, 0) + v
+            if gang_front is None:
+                gang_front = s.get("gang_front")
         return {"depth": depth, "per_class": per_class, "classes": classes,
                 "hint_skips": self.hint_skips, "per_shard": per_shard,
-                "steals": self.steals}
+                "steals": self.steals, "gang_front": gang_front}
 
     def waiting_tasks(self) -> List[Task]:
         # shard-major snapshot (rank-ordered within each shard)

@@ -43,6 +43,7 @@ from repro.core.executor import NEVER_STARTED, ExecRecord
 from repro.core.scheduler.base import DEADLINE_SHED, Scheduler
 from repro.core.task import Job, Task
 from repro.core.topology import placement_devices
+from repro.obs import events as obs
 
 _EPS = 1e-12
 
@@ -270,11 +271,15 @@ class Simulator:
                 # waiting tasks can never start (nothing running holds the
                 # capacity they need): count them as crashed-at-submit to
                 # avoid livelock
+                tr = getattr(self.sched, "_trace", None)
                 for t in self.sched.cancel_all_waiters():
                     js = self._blocked.pop(t.uid, None)
                     if js is not None:
                         js.job.crashed = True
                         js.job.finish_t = self.now
+                        if tr is not None:
+                            tr.emit(obs.CRASH, t.uid, t.name,
+                                    data={"reason": "stuck"})
                         self._finish_job(js, crashed_job=True)
                 self._blocked.clear()
                 return False
@@ -408,6 +413,12 @@ class Simulator:
         queue — wakeups on task_end/mark_dead/revive re-drive it."""
         task = js.job.tasks[js.next_task]
         js.t_queue = self.now
+        # read at emit time (attach_tracer may run after construction);
+        # submission is per-task, not the hot admission inner loop
+        tr = getattr(self.sched, "_trace", None)
+        if tr is not None:
+            tr.emit(obs.SUBMIT, task.uid, task.name,
+                    data={"job": js.job.name})
         if not self.sched.can_ever_fit(task):
             # never feasible (oversized footprint, or a gang shape the
             # topology cannot hold): fail fast with the scheduler's
@@ -416,6 +427,9 @@ class Simulator:
             js.job.crashed = True
             js.job.error = self.sched.infeasible_reason(task)
             js.job.finish_t = self.now
+            if tr is not None:
+                tr.emit(obs.CRASH, task.uid, task.name,
+                        data={"reason": "infeasible"})
             rec = ExecRecord(js.job.name, task.name, -1, self.now,
                              NEVER_STARTED, self.now, crashed=True)
             js.records.append(rec)
@@ -495,13 +509,19 @@ class Simulator:
             devs = placement_devices(placement)
             # memory-unsafe scheduler: admitted past capacity on any member
             # -> OOM crash after the startup delay (worker stays occupied)
+            tr = getattr(self.sched, "_trace", None)
             if any(self.sched.devices[d].oom() for d in devs):
                 self.sched.task_end(task)
                 js.job.crashed = True
+                if tr is not None:
+                    tr.emit(obs.CRASH, task.uid, task.name, devs[0],
+                            data={"reason": "oom"})
                 self._crashing.append((self.now + self.crash_delay, js))
                 continue
             task.start_t = self.now
             js.started = True
+            if tr is not None:
+                tr.emit(obs.BEGIN, task.uid, task.name, devs[0], epoch)
             self._started_at[task.uid] = self.now
             work = task.resources.est_seconds
             ledger = getattr(self.sched, "ledger", None)

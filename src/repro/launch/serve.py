@@ -54,7 +54,7 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
           prompt_len: int = 64, gen_len: int = 32, seed: int = 0,
           num_devices: int = 2, workers: int = 0,
           deadline_s: float = 5.0, shed_late: bool = False,
-          preempt: bool = False) -> dict:
+          preempt: bool = False, trace_path: str = None) -> dict:
     cfg = get_arch(arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(seed))
     prefill = jax.jit(make_prefill_step(cfg, attn_impl="flash_jnp"))
@@ -84,7 +84,8 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
     # enforcement: a request still parked when its deadline passes is failed
     # with JobStatus.SHED at the next drain instead of served late
     cluster = Cluster(sched, workers=workers or num_devices,
-                      shed_late=shed_late, preempt=preempt or None)
+                      shed_late=shed_late, preempt=preempt or None,
+                      trace=bool(trace_path))
     handles = []
     # per-batch wall-clock marks filled by the runner: (submit, first-token,
     # last-token) — the per-request TTFT/TPOT instrumentation
@@ -122,6 +123,8 @@ def serve(arch: str, *, requests: int = 16, batch: int = 4,
     cluster.drain()
     stats = cluster.stats()
     cluster.shutdown()
+    if trace_path:
+        cluster.export_trace(trace_path)
     wall = time.time() - t0
     done = [i for i, h in enumerate(handles) if h.status is JobStatus.DONE]
     # only real rows of completed batches count — a padded row generated
@@ -164,7 +167,8 @@ def serve_continuous(arch: str, *, requests: int = 16, batch: int = 4,
                      prompt_len: int = 64, gen_len: int = 32, seed: int = 0,
                      num_devices: int = 2, workers: int = 0,
                      ttft_slo_s: float = 5.0, tpot_slo_s: float = 1.0,
-                     shed_late: bool = False) -> dict:
+                     shed_late: bool = False,
+                     trace_path: str = None) -> dict:
     """Continuous-batching counterpart: per-request streaming through
     ServeEngine; ``batch`` becomes each decode loop's max rows."""
     from repro.serve.engine import SLO, JaxModel, ServeEngine
@@ -174,7 +178,8 @@ def serve_continuous(arch: str, *, requests: int = 16, batch: int = 4,
     model = JaxModel(cfg, params, max_batch=batch,
                      max_seq=prompt_len + gen_len, attn_impl="flash_jnp")
     cluster = Cluster(MGBAlg3Scheduler(num_devices),
-                      workers=workers or num_devices, shed_late=shed_late)
+                      workers=workers or num_devices, shed_late=shed_late,
+                      trace=bool(trace_path))
     eng = ServeEngine(cluster, model, max_batch=batch,
                       slo=SLO(ttft_s=ttft_slo_s, tpot_s=tpot_slo_s))
     rng = np.random.default_rng(seed)
@@ -188,6 +193,8 @@ def serve_continuous(arch: str, *, requests: int = 16, batch: int = 4,
     m = eng.metrics()
     eng.shutdown()
     cluster.shutdown()
+    if trace_path:
+        cluster.export_trace(trace_path)
     m.update(wall_s=wall, tokens_per_s=m["tokens"] / wall,
              sched_attempts=cluster.stats()["sched_attempts"])
     return m
@@ -216,6 +223,10 @@ def main():
                          "request may evict a resident one (checkpoint-"
                          "based, work-conserving) instead of queueing "
                          "behind it (static mode only)")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="record the scheduler's event stream and write a "
+                         "Chrome/Perfetto trace-event JSON here at the end "
+                         "(load in chrome://tracing or ui.perfetto.dev)")
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching via repro.serve.engine: "
                          "requests stream individually, decode batches "
@@ -227,7 +238,7 @@ def main():
             prompt_len=args.prompt_len, gen_len=args.gen_len,
             num_devices=args.num_devices, workers=args.workers,
             ttft_slo_s=args.deadline_s, tpot_slo_s=args.tpot_slo_s,
-            shed_late=args.shed_late)
+            shed_late=args.shed_late, trace_path=args.trace)
         print(f"[serve --continuous] {res['done']}/{res['requests']} done, "
               f"{res['tokens']} tokens in {res['wall_s']:.1f}s "
               f"({res['tokens_per_s']:.1f} tok/s, "
@@ -242,7 +253,7 @@ def main():
                 prompt_len=args.prompt_len, gen_len=args.gen_len,
                 num_devices=args.num_devices, workers=args.workers,
                 deadline_s=args.deadline_s, shed_late=args.shed_late,
-                preempt=args.preempt)
+                preempt=args.preempt, trace_path=args.trace)
     print(f"[serve] {res['tokens_generated']} tokens in {res['wall_s']:.1f}s "
           f"({res['tokens_per_s']:.1f} tok/s, "
           f"batch latency {res['mean_batch_latency_s'] * 1e3:.0f} ms, "

@@ -1,0 +1,20 @@
+"""Event-sourced observability plane for the scheduler/executor stack.
+
+One frozen event schema (``obs.events``) covers the full task lifecycle
+across every scheduler class and both backends; a bounded lock-light
+ring-buffer ``Tracer`` collects it with monotonic sequence numbers on the
+backend's own timeline (wall monotonic live, virtual clock simulated).
+
+  * ``obs.events``  — the schema, the ``Tracer``, and ``attach_tracer``
+  * ``obs.export``  — Chrome/Perfetto trace-event JSON (device occupancy
+    tracks, queue-depth counters, cross-device flow arrows)
+  * ``obs.metrics`` — log-bucketed histograms + counter/gauge registry
+  * ``obs.replay``  — flight recorder + sim/live parity differ +
+    lifecycle state-machine validator
+
+The subsystem imports nothing from ``repro.core`` so the scheduler base can
+import it without cycles, and a ``None`` tracer keeps every emission site a
+single attribute load (the PR-6 hot-path budget survives tracing disabled).
+"""
+from repro.obs import events, export, metrics, replay  # noqa: F401
+from repro.obs.events import Event, Tracer, attach_tracer  # noqa: F401

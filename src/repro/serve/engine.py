@@ -46,6 +46,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.cluster import Cluster, JobHandle, JobStatus
 from repro.core.scheduler.base import DEADLINE_SHED, SLOTS, Scheduler
 from repro.core.task import Job, ResourceVector, Task, UnitTask
+from repro.obs.metrics import MetricsRegistry
 
 _rids = itertools.count()
 
@@ -293,10 +294,14 @@ class ServeEngine:
 
     def __init__(self, cluster: Cluster, model, *, max_batch: int = 8,
                  slo: SLO = SLO(), loop_devices: Optional[Sequence[int]] = None,
-                 prefill_priority: int = 10, decode_priority: int = 5):
+                 prefill_priority: int = 10, decode_priority: int = 5,
+                 metrics_registry: Optional[MetricsRegistry] = None):
         if max_batch < 1 or max_batch >= SLOTS:
             raise ValueError(f"max_batch must be in [1, {SLOTS - 1}]")
         self.cluster = cluster
+        # optional obs.metrics sink: per-request ttft_s/tpot_s histograms
+        # recorded as requests resolve (streaming — no end-of-run scan)
+        self.metrics_registry = metrics_registry
         self.sched: Scheduler = cluster.sched
         self.model = model
         self.max_batch = max_batch
@@ -377,6 +382,9 @@ class ServeEngine:
             return
         req.t_first = self.cluster.now
         req.n_tokens = 1
+        if self.metrics_registry is not None:
+            self.metrics_registry.hist("ttft_s").record(
+                req.t_first - req.arrival_t)
         if req.first_token is not None:
             req.tokens.append(req.first_token)
         if req.gen_len <= 1:
@@ -465,6 +473,10 @@ class ServeEngine:
                         req.row = None
                         req.t_done = now
                         req.status = RequestStatus.DONE
+                        if self.metrics_registry is not None \
+                                and req.n_tokens > 1:
+                            self.metrics_registry.hist("tpot_s").record(
+                                req.tpot_s)
                         retired.append(req)
         for req in retired:
             # outside the engine lock: the shrink's drain fires join

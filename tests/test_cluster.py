@@ -25,6 +25,7 @@ from repro.core.executor import ExecJob, Executor
 from repro.core.scheduler import MGBAlg2Scheduler, MGBAlg3Scheduler
 from repro.core.simulator import Simulator
 from repro.core.task import Job, ResourceVector, Task, UnitTask
+from repro.obs.replay import admission_order, first_divergence
 
 GB = 1024**3
 
@@ -202,51 +203,43 @@ def _ordering_trace(cluster, *, est=0.01, body=None):
             "low-edf", "low-a", "low-b"]
 
 
-def _admission_order(sched, names_by_uid):
-    return [names_by_uid[uid] for uid, _ in sched.placements]
-
-
-def _uid_names(cluster):
-    return {h.job.tasks[0].uid: h.job.name for h in cluster.handles}
-
-
 def test_priority_inversion_high_submitted_late_overtakes():
     """A high-priority job submitted AFTER parked low-priority waiters is
     admitted before them — the queue reorders, not the caller."""
-    sched = MGBAlg2Scheduler(1)
     gate = threading.Event()
-    c = Cluster(sched, workers=1)
+    c = Cluster(MGBAlg2Scheduler(1), workers=1, trace=True)
     # only "first" actually waits on the gate — everyone else starts after
     # gate.set() and returns immediately
     expected = _ordering_trace(c, body=lambda d: gate.wait(0.2))
     gate.set()
     c.drain()
-    assert _admission_order(sched, _uid_names(c)) == expected
+    assert admission_order(c.trace.events()) == expected
     assert all(h.status is JobStatus.DONE for h in c.handles)
     c.shutdown()
 
 
 def test_sim_edf_and_priority_ordering():
-    sched = MGBAlg2Scheduler(1)
-    c = Cluster(sched, workers=8, backend="sim")
+    c = Cluster(MGBAlg2Scheduler(1), workers=8, backend="sim", trace=True)
     expected = _ordering_trace(c)
     c.drain()
-    assert _admission_order(sched, _uid_names(c)) == expected
+    assert admission_order(c.trace.events()) == expected
 
 
 def test_live_and_sim_same_admission_order_for_same_trace():
     """Acceptance criterion: the two backends replay one submission trace
-    into the SAME admission order (they share the scheduler's queue)."""
-    sched_live, sched_sim = MGBAlg2Scheduler(1), MGBAlg2Scheduler(1)
-    live = Cluster(sched_live, workers=1)
+    into the SAME admission order (they share the scheduler's queue) —
+    asserted through the obs.replay parity differ over each backend's
+    event stream."""
+    live = Cluster(MGBAlg2Scheduler(1), workers=1, trace=True)
     _ordering_trace(live)
     live.drain()
     live.shutdown()
-    sim = Cluster(sched_sim, workers=8, backend="sim")
+    sim = Cluster(MGBAlg2Scheduler(1), workers=8, backend="sim", trace=True)
     _ordering_trace(sim)
     sim.drain()
-    assert _admission_order(sched_live, _uid_names(live)) \
-        == _admission_order(sched_sim, _uid_names(sim))
+    div = first_divergence(admission_order(live.trace.events()),
+                           admission_order(sim.trace.events()))
+    assert div is None, div
 
 
 def test_deadline_is_ordering_hint_not_enforcement():

@@ -33,6 +33,7 @@ from repro.core.simulator import Simulator
 from repro.core.task import Job, ResourceVector, Task, UnitTask
 from repro.core.topology import ICI_BW, Topology
 from repro.core.workloads import make_gang_job, split_gangs
+from repro.obs.replay import admission_order, first_divergence
 
 GB = 1024**3
 
@@ -165,26 +166,24 @@ def _gang_trace(cluster, *, gate=None):
     return ["first", "hi-edf", "lo-a", "hi-late", "lo-gang"]
 
 
-def _admission_order(sched, cluster):
-    names = {h.job.tasks[0].uid: h.job.name for h in cluster.handles}
-    return [names[uid] for uid, _ in sched.placements]
-
-
 def test_live_and_sim_same_gang_admission_order():
-    sched_live = GangScheduler(pods=1, rows=1, cols=2)
     gate = threading.Event()
-    live = Cluster(sched_live, workers=2)
+    live = Cluster(GangScheduler(pods=1, rows=1, cols=2), workers=2,
+                   trace=True)
     expected = _gang_trace(live, gate=gate)
     gate.set()
     live.drain()
     live.shutdown()
-    assert _admission_order(sched_live, live) == expected
+    assert admission_order(live.trace.events()) == expected
 
-    sched_sim = GangScheduler(pods=1, rows=1, cols=2)
-    sim = Cluster(sched_sim, workers=8, backend="sim")
+    sim = Cluster(GangScheduler(pods=1, rows=1, cols=2), workers=8,
+                  backend="sim", trace=True)
     assert _gang_trace(sim) == expected
     sim.drain()
-    assert _admission_order(sched_sim, sim) == expected
+    assert admission_order(sim.trace.events()) == expected
+    div = first_divergence(admission_order(live.trace.events()),
+                           admission_order(sim.trace.events()))
+    assert div is None, div
     assert all(h.status is JobStatus.DONE for h in sim.handles)
 
 
