@@ -11,9 +11,9 @@ import time
 
 from benchmarks import (
     bench_executor, bench_gang, bench_obs, bench_preempt,
-    bench_sched_scale, bench_serve, fig4_alg2_vs_alg3, fig5_throughput,
-    fig6_nn_schedgpu, kernels_bench, table2_crashes, table3_turnaround,
-    table4_slowdown,
+    bench_sched_scale, bench_serve, bench_whatif, fig4_alg2_vs_alg3,
+    fig5_throughput, fig6_nn_schedgpu, kernels_bench, table2_crashes,
+    table3_turnaround, table4_slowdown,
 )
 
 EXPERIMENTS = {
@@ -30,12 +30,13 @@ EXPERIMENTS = {
     "sched_scale": bench_sched_scale.run,
     "serve": bench_serve.run,
     "obs": bench_obs.run,
+    "whatif": bench_whatif.run,
 }
 
 # experiments whose run() takes smoke= (tiny inputs, assert-only, no JSON);
 # --smoke forwards to these and leaves the rest at full size
 SMOKE_CAPABLE = frozenset({"executor", "gang", "obs", "preempt",
-                           "sched_scale", "serve"})
+                           "sched_scale", "serve", "whatif"})
 
 
 def main() -> None:

@@ -11,6 +11,10 @@ later revives. The whole lifecycle lands in ``cluster.trace``:
   * instant markers for the death/revive,
   * a flow arrow stitching the evicted task's device-0 → device-1 arc.
 
+The epilogue prints each job's decision verdicts (`handle.explain()`):
+why the batch jobs parked while urgent ones overtook them, which task
+the dead device evicted, and where everything finally landed.
+
 Open the written JSON in chrome://tracing or https://ui.perfetto.dev.
 
     PYTHONPATH=src python examples/trace_viewer.py
@@ -18,6 +22,7 @@ Open the written JSON in chrome://tracing or https://ui.perfetto.dev.
 from repro.core.cluster import Cluster
 from repro.core.scheduler import PreemptiveAlg3Scheduler
 from repro.core.task import Job, ResourceVector, Task, UnitTask
+from repro.obs.explain import format_verdicts
 from repro.obs.export import trace_summary
 from repro.obs.metrics import metrics_from_events
 from repro.obs.replay import validate_lifecycles
@@ -38,19 +43,20 @@ def mk_job(name, mem_gb, est, chips=1):
 def main():
     cluster = Cluster(PreemptiveAlg3Scheduler(2), workers=8, backend="sim",
                       trace=True)
+    handles = []
     # device 0 dies at t=0.5 (virtual): its resident is evicted, requeued,
     # and resumes on device 1 — the cross-device flow in the viewer
     cluster._sim._failure_pending = (0.5, 0)
 
     for i in range(4):
-        cluster.submit(mk_job(f"batch/{i}", mem_gb=12.0, est=1.0),
-                       priority=0)
+        handles.append(cluster.submit(mk_job(f"batch/{i}", mem_gb=12.0,
+                                             est=1.0), priority=0))
     cluster.run_until(0.8)
     # urgent late arrivals overtake the parked backlog (EDF within class)
-    cluster.submit(mk_job("urgent/a", mem_gb=9.0, est=0.3), priority=5,
-                   deadline_s=1.0)
-    cluster.submit(mk_job("urgent/b", mem_gb=9.0, est=0.3), priority=5,
-                   deadline_s=2.0)
+    handles.append(cluster.submit(mk_job("urgent/a", mem_gb=9.0, est=0.3),
+                                  priority=5, deadline_s=1.0))
+    handles.append(cluster.submit(mk_job("urgent/b", mem_gb=9.0, est=0.3),
+                                  priority=5, deadline_s=2.0))
     # keep device 0 down long enough that the evicted resident resumes on
     # device 1 (the migration arc), then bring it back for the backlog
     cluster.run_until(3.0)
@@ -73,6 +79,15 @@ def main():
     print(f"queueing delay: n={qd['n']} p50={qd['p50']:.3f}s "
           f"p99={qd['p99']:.3f}s; "
           f"migrations={snap['counters'].get('migrations', 0)}")
+
+    # why did each job wait / move / land where it did — the verdict
+    # window every decision site recorded alongside the event stream
+    print("\ndecision verdicts:")
+    for h in handles:
+        for name, verdicts in h.explain().items():
+            print(f"  {name}:")
+            for line in format_verdicts(verdicts).splitlines():
+                print(f"    {line}")
     print("open the JSON in chrome://tracing or https://ui.perfetto.dev")
 
 

@@ -48,8 +48,11 @@ from repro.core.scheduler.base import Scheduler
 from repro.core.scheduler.preempt import PreemptionMixin
 from repro.core.simulator import Simulator, _JobState
 from repro.core.task import Job
+from repro.obs import explain as obsx
 from repro.obs.events import Tracer, attach_tracer
+from repro.obs.explain import Explainer, attach_explainer
 from repro.obs.export import write_chrome_trace
+from repro.obs.metrics import MetricsRegistry
 from repro.obs.replay import FlightRecorder
 
 
@@ -131,6 +134,13 @@ class JobHandle:
         CANCELLED (or CRASHED if its in-flight kernel crashes)."""
         return self._cluster._cancel(self._state)
 
+    def explain(self) -> Dict[str, List]:
+        """Per-task decision verdicts: why is this job still parked, who
+        evicted it and at what cost, where did it land. Delegates to
+        ``Cluster.explain`` (needs the cluster built with ``explain=`` or
+        ``trace=``)."""
+        return self._cluster.explain(self)
+
 
 class Cluster:
     """The open-arrival submission surface over a scheduler + backend."""
@@ -141,6 +151,8 @@ class Cluster:
                  poll_interval: float = 0.05, crash_delay: float = 8.0,
                  shed_late: bool = False, preempt: Optional[bool] = None,
                  trace: Union[None, bool, Tracer] = None,
+                 explain: Union[None, bool, Explainer] = None,
+                 metrics: Optional[MetricsRegistry] = None,
                  flight_path: Optional[str] = None):
         self.sched = scheduler
         self.backend = backend
@@ -188,11 +200,28 @@ class Cluster:
         # repointing (and the live backend's wall-monotonic restore) above
         self.trace: Optional[Tracer] = None
         self.flight: Optional[FlightRecorder] = None
-        if trace:
+        self.metrics: Optional[MetricsRegistry] = metrics
+        # NB: identity checks, not truthiness — Tracer/Explainer define
+        # __len__, so a freshly-built (empty) instance is falsy and a bare
+        # `if trace:` would silently skip attaching it
+        want_trace = trace is not None and trace is not False
+        if want_trace:
             self.trace = trace if isinstance(trace, Tracer) else Tracer()
             attach_tracer(scheduler, self.trace)
             if flight_path is not None:
-                self.flight = FlightRecorder(self.trace, flight_path)
+                self.flight = FlightRecorder(self.trace, flight_path,
+                                             registry=metrics)
+        # decision explainability (repro.obs.explain): explain=True builds
+        # a default Explainer, or pass a pre-sized one; explain=None follows
+        # trace — a traced cluster answers "why" as well as "what". Attached
+        # after the backend for the same late clock binding as the tracer.
+        self.explainer: Optional[Explainer] = None
+        if explain is None:
+            explain = want_trace
+        if explain is not False:
+            self.explainer = explain if isinstance(explain, Explainer) \
+                else Explainer()
+            attach_explainer(scheduler, self.explainer)
         self.handles: List[JobHandle] = []
         # scheduler counters are lifetime totals; snapshot them so a cluster
         # built over a reused scheduler reports only its own activity
@@ -349,6 +378,22 @@ class Cluster:
         if self._sim is not None:
             self._sim.run_until(t)
 
+    def inject_failure(self, device) -> None:
+        """Declare ``device`` dead NOW on either backend (sim: residents'
+        virtual runs stop and re-park; live: the scheduler's mark_dead
+        path). ``obs.whatif`` replays recorded fleet faults through this."""
+        if self._sim is not None:
+            self._sim.inject_failure(device)
+        else:
+            self.sched.mark_dead(device)
+
+    def revive(self, device) -> None:
+        """Bring ``device`` back in service on either backend."""
+        if self._sim is not None:
+            self._sim.revive_device(device)
+        else:
+            self.sched.revive(device)
+
     @property
     def now(self) -> float:
         """Current time on the backend's clock (virtual for sim)."""
@@ -362,14 +407,61 @@ class Cluster:
         else:
             self._sim_drain_checked()
 
+    def explain(self, handle: "JobHandle") -> Dict[str, List[obsx.Verdict]]:
+        """Why is this job still parked / who evicted it, at what cost —
+        answered in one call, per task name: the recorded verdict window
+        (rejections with per-device reasons, skips, preemption plans,
+        evictions naming the preemptor, the final placement) plus, for a
+        task parked RIGHT NOW, a live rejection probe of the current
+        queue state — so even a waiter the drain never individually
+        probed (class-memo skip) reports at least one structured reason
+        per attempted device. Requires ``explain=`` (on by default when
+        the cluster is traced)."""
+        if self.explainer is None:
+            raise RuntimeError(
+                "Cluster was built without explain= — pass explain=True "
+                "(or an Explainer) to record decision verdicts")
+        ex = self.explainer
+        eq = getattr(self.sched, "explain_queue", None)
+        out: Dict[str, List[obsx.Verdict]] = {}
+        for task in handle.job.tasks:
+            verdicts = ex.verdicts(task.uid)
+            if eq is not None:
+                live = eq(task)
+                if live is not None:       # parked right now: probe live
+                    verdicts.append(obsx.Verdict(
+                        seq=-1, t=self.now, uid=task.uid, name=task.name,
+                        action=obsx.REJECTED, reasons=tuple(live),
+                        data={"live": True}))
+            out[task.name or str(task.uid)] = verdicts
+        return out
+
     def export_trace(self, path: str) -> Dict:
         """Write the tracer's event window as a Chrome/Perfetto trace-event
         JSON (chrome://tracing or https://ui.perfetto.dev) and return the
-        document. Requires the cluster to have been built with ``trace=``."""
+        document. Requires the cluster to have been built with ``trace=``.
+
+        On a sharded or multi-pod control plane the device tracks are
+        named ``pod{p}/dev{d}`` (pod factoring derived from the
+        scheduler) instead of flat ``device {i}``."""
         if self.trace is None:
             raise RuntimeError("Cluster was built without trace= — pass "
                                "trace=True (or a Tracer) to enable telemetry")
-        return write_chrome_trace(self.trace.events(), path)
+        return write_chrome_trace(self.trace.events(), path,
+                                  devices_per_pod=self._devices_per_pod())
+
+    def _devices_per_pod(self) -> Optional[int]:
+        """Pod factoring for trace-track / dashboard labels: a sharded
+        wrapper's uniform shard width, or a multi-pod gang topology's
+        pod size; None for flat fleets (keeps ``device {i}`` labels)."""
+        sched = self.sched
+        dpp = getattr(sched, "_shard_devs", None)
+        if dpp and len(getattr(sched, "shards", ())) > 1:
+            return dpp
+        topo = getattr(sched, "topo", None)
+        if topo is not None and getattr(topo, "pods", 1) > 1:
+            return topo.rows * topo.cols
+        return None
 
     def __enter__(self) -> "Cluster":
         return self

@@ -379,7 +379,8 @@ class Executor:
         tr = getattr(self.sched, "_trace", None)
         if tr is not None:
             tr.emit(obs.SUBMIT, task.uid, task.name,
-                    data={"job": jr.ej.job.name})
+                    data=obs.submit_data(task, jr.ej.job.name,
+                                         jr.ej.job.uid))
         if not self.sched.can_ever_fit(task):
             # never feasible on any alive device (or, for a gang, no
             # feasible device-group shape): crash-at-submit with the

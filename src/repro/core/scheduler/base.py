@@ -64,6 +64,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.task import Task
 from repro.obs import events as obs
+from repro.obs import explain as obsx
 
 # 16 GB v5e HBM per chip (the paper's P100/V100 also had 16 GB)
 DEFAULT_HBM = 16 * 1024**3
@@ -89,6 +90,12 @@ class _DeadlineShed:
 
 
 DEADLINE_SHED = _DeadlineShed()
+
+# preallocated skip-verdict reasons (obs.explain): collapse-recorded on the
+# drain's probe-avoidance paths, so the tuples must not be rebuilt per skip
+_HINT_SKIP_REASONS = ({"reason": obsx.R_HINT_SKIP},)
+_CLASS_MEMO_REASONS = ({"reason": obsx.R_CLASS_MEMO},)
+_PREEMPT_MEMO_REASONS = ({"reason": "preempt_memo_skip"},)
 
 
 def slots_needed(task: Task) -> int:
@@ -327,6 +334,10 @@ class WaiterQueueMixin:
         # plane stamps each shard's base; 0 everywhere else).
         self._trace: Optional[obs.Tracer] = None
         self._trace_dev_off = 0
+        # decision explainer (obs.explain.attach_explainer sets it): same
+        # None-guard contract as _trace — every verdict site costs one
+        # attribute load when explanation is off
+        self._explain: Optional[obsx.Explainer] = None
 
     @staticmethod
     def _class_key(task: Task) -> Any:
@@ -546,6 +557,11 @@ class WaiterQueueMixin:
                 if tr is not None:
                     tr.emit(obs.SHED, w.task.uid, w.task.name,
                             epoch=self._epochs.get(w.task.uid, 0))
+                ex = self._explain
+                if ex is not None:
+                    ex.record(w.task.uid, w.task.name, obsx.SHED,
+                              reasons=({"reason": "deadline_expired",
+                                        "deadline_t": w.deadline_t},))
                 fired.append((w, DEADLINE_SHED,
                               self._epochs.get(w.task.uid, 0)))
         if not len(q):
@@ -573,11 +589,22 @@ class WaiterQueueMixin:
                 # it cannot serve ANY member: the whole class is skipped
                 # (each member counts as a hint skip, as in the scan)
                 self.hint_skips += q.class_size(vec)
+                ex = self._explain
+                if ex is not None:
+                    ex.skip(w.task.uid, w.task.name, _HINT_SKIP_REASONS)
                 continue
             placement = self._admit_locked(w.task)
             if placement is None:
                 # failed-vector memo: admissions only consume capacity, so
                 # this class stays infeasible for the rest of the pass
+                ex = self._explain
+                if ex is not None:
+                    # the class head carries the probe's rejection verdict
+                    # (recorded in _admit_locked); note how many classmates
+                    # were retired for the pass on its strength
+                    n = q.class_size(vec) - 1
+                    if n > 0:
+                        ex.annotate_last(w.task.uid, "class_memo_skip", n)
                 continue
             q.discard(w.task.uid)
             self._admit_cbs[w.task.uid] = w.callback
@@ -619,6 +646,11 @@ class WaiterQueueMixin:
                 if tr is not None:
                     tr.emit(obs.SHED, w.task.uid, w.task.name,
                             epoch=self._epochs.get(w.task.uid, 0))
+                ex = self._explain
+                if ex is not None:
+                    ex.record(w.task.uid, w.task.name, obsx.SHED,
+                              reasons=({"reason": "deadline_expired",
+                                        "deadline_t": w.deadline_t},))
                 fired.append((w, DEADLINE_SHED,
                               self._epochs.get(w.task.uid, 0)))
                 continue
@@ -626,8 +658,14 @@ class WaiterQueueMixin:
             ckey = self._class_key(w.task)
             if freed is not None and not self._hint_may_fit(w.task, freed):
                 self.hint_skips += 1
+                ex = self._explain
+                if ex is not None:
+                    ex.skip(w.task.uid, w.task.name, _HINT_SKIP_REASONS)
             elif any(f == ckey for f in failed):
-                pass  # identical resource class already failed this pass
+                # identical resource class already failed this pass
+                ex = self._explain
+                if ex is not None:
+                    ex.skip(w.task.uid, w.task.name, _CLASS_MEMO_REASONS)
             else:
                 placement = self._admit_locked(w.task)
                 if placement is None and len(failed) < self._DRAIN_MEMO:
@@ -643,6 +681,10 @@ class WaiterQueueMixin:
                     for res, prio, dl in pfailed)
                 if dominated:
                     placement = None
+                    ex = self._explain
+                    if ex is not None:
+                        ex.skip(w.task.uid, w.task.name,
+                                _PREEMPT_MEMO_REASONS)
                 else:
                     # free capacity (even hinted/memoized as insufficient)
                     # cannot take this waiter — but eviction of strictly
@@ -815,6 +857,10 @@ class WaiterQueueMixin:
                     tr.emit(obs.CRASH, w.task.uid, w.task.name,
                             epoch=self._epochs.get(w.task.uid, 0),
                             data={"reason": "infeasible"})
+                ex = self._explain
+                if ex is not None:
+                    ex.record(w.task.uid, w.task.name, obsx.CRASHED,
+                              reasons=({"reason": "infeasible"},))
                 failed.append((w, None, self._epochs.get(w.task.uid, 0)))
         failed.sort(key=lambda e: e[0].sort_key)  # fire in rank order
         return failed
@@ -860,6 +906,27 @@ class WaiterQueueMixin:
         """Put a stolen waiter back exactly where it was (same seq/rank)."""
         with self._lock:
             self._restore_waiter_locked(w)
+
+    # -- decision explainability (obs.explain) -------------------------------
+    # cap on per-verdict reason entries: a huge fleet's rejection verdict
+    # must not allocate thousands of dicts under the lock
+    _REASONS_CAP = 64
+
+    def _reject_reasons_locked(self, task: Task) -> Tuple[dict, ...]:
+        """Structured per-device/per-group rejection reasons for a failed
+        admission probe (the payload of a REJECTED verdict). Hosts
+        override with their policy's exact decomposition."""
+        return ()
+
+    def explain_queue(self, task: Task) -> Optional[Tuple[dict, ...]]:
+        """Live rejection reasons for a currently-parked task — an
+        on-demand probe under the lock, for waiters whose class was
+        memo-skipped and therefore carry no recorded verdict of their own.
+        None when the task is not parked here."""
+        with self._lock:
+            if self._queue.get(task.uid) is None:
+                return None
+            return self._reject_reasons_locked(task)
 
 
 class Scheduler(WaiterQueueMixin):
@@ -912,6 +979,12 @@ class Scheduler(WaiterQueueMixin):
         self.begin_attempts += 1
         dev = self.select_device(task)
         if dev is None:
+            ex = self._explain
+            if ex is not None:
+                # lazy: the O(devices) reason walk runs once per parked
+                # episode — repeat probes just bump the verdict's repeats
+                ex.reject(task.uid, task.name,
+                          lambda: self._reject_reasons_locked(task))
             return None
         dev.admit(task)
         task.device = dev.index
@@ -921,7 +994,80 @@ class Scheduler(WaiterQueueMixin):
             tr.emit(obs.ADMIT, task.uid, task.name,
                     dev.index + self._trace_dev_off,
                     self._epochs.get(task.uid, 0))
+        ex = self._explain
+        if ex is not None:
+            ex.record(task.uid, task.name, obsx.ADMITTED,
+                      device=dev.index + self._trace_dev_off)
         return dev.index
+
+    # -- decision explainability (obs.explain) -------------------------------
+    def device_verdict(self, task: Task, dev: DeviceState) -> Optional[dict]:
+        """Structured rejection reason for ``task`` on ``dev`` right now, or
+        None when the device is feasible. Mirrors ``device_feasible``
+        check-for-check; policy subclasses decompose their own predicate."""
+        if not dev.alive:
+            return {"device": dev.index + self._trace_dev_off,
+                    "reason": obsx.R_DEVICE_DEAD}
+        if not self.device_feasible(task, dev):
+            return {"device": dev.index + self._trace_dev_off,
+                    "reason": obsx.R_SLOTS_FULL}
+        return None
+
+    def _reject_reasons_locked(self, task: Task) -> Tuple[dict, ...]:
+        """Per-device rejection reasons for a failed admission probe (the
+        payload of a REJECTED verdict). One entry per refusing device, up
+        to ``_REASONS_CAP`` + a truncation marker."""
+        if getattr(task, "grow_hosts", None):
+            return self._grow_reject_reasons_locked(task)
+        out: List[dict] = []
+        omitted = 0
+        cap = self._REASONS_CAP
+        for dev in self.devices:
+            r = self.device_verdict(task, dev)
+            if r is None:
+                continue
+            if len(out) < cap:
+                out.append(r)
+            else:
+                omitted += 1
+        if omitted:
+            out.append({"reason": "truncated", "omitted": omitted})
+        return tuple(out)
+
+    def _grow_reject_reasons_locked(self, task: Task) -> Tuple[dict, ...]:
+        """Why a decode-slot delta could not grow: one entry per candidate
+        host, mirroring ``_grow_feasible_locked`` check-for-check."""
+        out: List[dict] = []
+        off = self._trace_dev_off
+        need = slots_needed(task)
+        for host in task.grow_hosts:
+            if host.device is None:
+                out.append({"host": host.uid, "reason": obsx.R_HOST_GONE})
+                continue
+            dev = self.devices[host.device]
+            if not dev.alive:
+                out.append({"host": host.uid, "device": dev.index + off,
+                            "reason": obsx.R_DEVICE_DEAD})
+            elif host.uid not in dev.residents:
+                out.append({"host": host.uid, "device": dev.index + off,
+                            "reason": obsx.R_HOST_GONE})
+            elif task.resources.hbm_bytes > dev.free_hbm:
+                out.append({"host": host.uid, "device": dev.index + off,
+                            "reason": obsx.R_MEMORY_SHORT,
+                            "short_bytes":
+                                task.resources.hbm_bytes - dev.free_hbm})
+            elif host.slot_budget is not None:
+                if host.grown_now >= host.slot_budget:
+                    out.append({"host": host.uid, "device": dev.index + off,
+                                "reason": obsx.R_GROW_BUDGET,
+                                "grown_now": host.grown_now,
+                                "slot_budget": host.slot_budget})
+            elif dev.used_slots + need > SLOTS:
+                out.append({"host": host.uid, "device": dev.index + off,
+                            "reason": obsx.R_SLOTS_FULL,
+                            "short_slots": dev.used_slots + need - SLOTS})
+        return tuple(out)
+
 
     def _grow_feasible_locked(self, task: Task,
                               dev: DeviceState, host: Task) -> bool:
@@ -961,6 +1107,10 @@ class Scheduler(WaiterQueueMixin):
             if best is None or rank(dev, host) < rank(*best):
                 best = (dev, host)
         if best is None:
+            ex = self._explain
+            if ex is not None:
+                ex.reject(task.uid, task.name,
+                          lambda: self._grow_reject_reasons_locked(task))
             return None
         dev, host = best
         dev.admit(task)
@@ -974,6 +1124,11 @@ class Scheduler(WaiterQueueMixin):
                     dev.index + self._trace_dev_off,
                     self._epochs.get(task.uid, 0),
                     data={"host": host.uid})
+        ex = self._explain
+        if ex is not None:
+            ex.record(task.uid, task.name, obsx.GROWN,
+                      device=dev.index + self._trace_dev_off,
+                      data={"host": host.uid})
         return dev.index
 
     def can_ever_fit(self, task: Task) -> bool:
@@ -1053,6 +1208,11 @@ class Scheduler(WaiterQueueMixin):
                         dev.index + self._trace_dev_off,
                         self._epochs.get(task.uid, 0),
                         data={"bind": True})
+            ex = self._explain
+            if ex is not None:
+                ex.record(task.uid, task.name, obsx.ADMITTED,
+                          device=dev.index + self._trace_dev_off,
+                          data={"bind": True})
             return True
 
     def task_grow(self, slot_task: Task, hosts: Sequence[Task],
@@ -1095,6 +1255,14 @@ class Scheduler(WaiterQueueMixin):
                     tr.emit(obs.EVICT, t.uid, t.name, device_index + off,
                             self._epochs.get(t.uid, 0),
                             data={"cause": "device_dead"})
+            ex = self._explain
+            if ex is not None:
+                off = self._trace_dev_off
+                for t in evicted:
+                    ex.record(t.uid, t.name, obsx.EVICTED,
+                              device=device_index + off,
+                              reasons=({"reason": obsx.R_DEVICE_DEAD,
+                                        "device": device_index + off},))
             for t in evicted:
                 dev.release(t)
                 t.device = None

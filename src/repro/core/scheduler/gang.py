@@ -47,6 +47,7 @@ from repro.core.topology import (
     DCN_BW, ICI_BW, Cell, GangReservation, Topology,
 )
 from repro.obs import events as obs
+from repro.obs import explain as obsx
 
 CellOrIndex = Union[Cell, int]
 
@@ -209,6 +210,10 @@ class GangScheduler(WaiterQueueMixin):
         self.begin_attempts += 1
         group = self._find_group(task)
         if group is None:
+            ex = self._explain
+            if ex is not None:
+                ex.reject(task.uid, task.name,
+                          lambda: self._reject_reasons_locked(task))
             return None
         self._reserve_group_locked(task, group)
         self.placements.append((task.uid, group.lead))
@@ -222,7 +227,67 @@ class GangScheduler(WaiterQueueMixin):
                         group.lead + off, self._epochs.get(task.uid, 0),
                         data={"devices": tuple(
                             d + off for d in group.device_indices)})
+        ex = self._explain
+        if ex is not None:
+            off = self._trace_dev_off
+            data = None
+            if max(task.resources.chips, 1) > 1:
+                data = {"devices": tuple(
+                    d + off for d in group.device_indices)}
+            ex.record(task.uid, task.name, obsx.ADMITTED,
+                      device=group.lead + off, data=data)
         return group
+
+    def _reject_reasons_locked(self, task: Task) -> Tuple[dict, ...]:
+        """Why no group was feasible: one entry per refusing member cell
+        (dead / memory-short / alg2 slots-full, mirroring ``_member_ok``),
+        plus — when every member of some candidate group passes yet the
+        group is still rejected under alg2 — a ``link_headroom`` entry
+        naming the first such group. Falls back to ``no_feasible_group``
+        when every cell passes individually but no contiguous tile exists."""
+        r = task.resources
+        k = max(r.chips, 1)
+        per_chip = r.hbm_bytes // k
+        need = slots_needed(task)
+        off = self._trace_dev_off
+        out: List[dict] = []
+        omitted = 0
+        cap = self._REASONS_CAP
+        for cell, d in self.topo.cells.items():
+            reason = None
+            if not d.alive:
+                reason = {"device": d.index + off,
+                          "reason": obsx.R_DEVICE_DEAD}
+            elif per_chip > d.free_hbm:
+                reason = {"device": d.index + off,
+                          "reason": obsx.R_MEMORY_SHORT,
+                          "short_bytes": per_chip - d.free_hbm}
+            elif self.policy == "alg2" and d.used_slots + need > SLOTS:
+                reason = {"device": d.index + off,
+                          "reason": obsx.R_SLOTS_FULL,
+                          "short_slots": d.used_slots + need - SLOTS}
+            if reason is None:
+                continue
+            if len(out) < cap:
+                out.append(reason)
+            else:
+                omitted += 1
+        if omitted:
+            out.append({"reason": "truncated", "omitted": omitted})
+        if self.policy == "alg2":
+            # a group whose members all fit can still lose on link headroom
+            for group in self.topo.candidate_groups(k):
+                if all(self._member_ok(c, per_chip, need)
+                       for c in group.cells()) \
+                        and not self.topo.link_headroom_ok(group, r):
+                    out.append({"device": group.lead + off,
+                                "reason": obsx.R_LINK_HEADROOM,
+                                "devices": tuple(
+                                    d + off for d in group.device_indices)})
+                    break
+        if not out:
+            out.append({"reason": obsx.R_NO_FEASIBLE_GROUP, "chips": k})
+        return tuple(out)
 
     def _reserve_group_locked(self, task: Task,
                               group: GangReservation) -> None:
@@ -334,6 +399,14 @@ class GangScheduler(WaiterQueueMixin):
                         tr.emit(obs.GANG_RELEASE, task.uid, task.name,
                                 group.lead + off,
                                 self._epochs.get(task.uid, 0))
+                ex = self._explain
+                if ex is not None:
+                    ex.record(task.uid, task.name, obsx.EVICTED,
+                              device=group.lead + off,
+                              reasons=({"reason": obsx.R_DEVICE_DEAD,
+                                        "device":
+                                            self.topo.cells[cell].index
+                                            + off},))
                 self._release_locked(task)
                 task.device = None
                 evicted.append(task)

@@ -25,6 +25,7 @@ from repro.core.scheduler.base import (
     SLOTS, DeviceState, Scheduler, slots_needed,
 )
 from repro.core.task import Task
+from repro.obs import explain as obsx
 
 
 class MGBAlg2Scheduler(Scheduler):
@@ -39,6 +40,21 @@ class MGBAlg2Scheduler(Scheduler):
             return False  # memory: hard
         # dev.used_slots is maintained on admit/release: O(1) per device
         return dev.used_slots + slots_needed(task) <= SLOTS  # compute: hard
+
+    def device_verdict(self, task: Task, dev: DeviceState) -> Optional[dict]:
+        if not dev.alive:
+            return {"device": dev.index + self._trace_dev_off,
+                    "reason": obsx.R_DEVICE_DEAD}
+        if task.resources.hbm_bytes > dev.free_hbm:
+            return {"device": dev.index + self._trace_dev_off,
+                    "reason": obsx.R_MEMORY_SHORT,
+                    "short_bytes": task.resources.hbm_bytes - dev.free_hbm}
+        need = slots_needed(task)
+        if dev.used_slots + need > SLOTS:
+            return {"device": dev.index + self._trace_dev_off,
+                    "reason": obsx.R_SLOTS_FULL,
+                    "short_slots": dev.used_slots + need - SLOTS}
+        return None
 
     def select_device(self, task: Task) -> Optional[DeviceState]:
         for dev in self.devices:
@@ -65,6 +81,20 @@ class MGBAlg3Scheduler(Scheduler):
             return False  # memory: hard — never an OOM (paper's guarantee)
         return not (self.max_residents
                     and len(dev.residents) >= self.max_residents)
+
+    def device_verdict(self, task: Task, dev: DeviceState) -> Optional[dict]:
+        if not dev.alive:
+            return {"device": dev.index + self._trace_dev_off,
+                    "reason": obsx.R_DEVICE_DEAD}
+        if task.resources.hbm_bytes > dev.free_hbm:
+            return {"device": dev.index + self._trace_dev_off,
+                    "reason": obsx.R_MEMORY_SHORT,
+                    "short_bytes": task.resources.hbm_bytes - dev.free_hbm}
+        if self.max_residents and len(dev.residents) >= self.max_residents:
+            return {"device": dev.index + self._trace_dev_off,
+                    "reason": obsx.R_MAX_RESIDENTS,
+                    "cap": self.max_residents}
+        return None
 
     def select_device(self, task: Task) -> Optional[DeviceState]:
         best: Optional[DeviceState] = None

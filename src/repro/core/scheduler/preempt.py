@@ -51,6 +51,7 @@ from repro.core.scheduler.mgb import MGBAlg2Scheduler, MGBAlg3Scheduler
 from repro.core.scheduler.base import slots_needed
 from repro.core.task import Task
 from repro.obs import events as obs
+from repro.obs import explain as obsx
 
 # a preemption notice batch: (evicted task, its SUPERSEDED admission epoch)
 # in eviction order. The epoch lets a backend reject a late-delivered notice
@@ -232,11 +233,23 @@ class PreemptionMixin:
             self._restore_locked(v, tok)
         return plan
 
-    def _plan_victims_locked(self, task: Task) -> Optional[List[Task]]:
+    # bound on recorded considered-plan entries per preemption attempt (the
+    # explain collector must not grow with fleet size)
+    _PLANS_CAP = 16
+
+    def _plan_victims_locked(self, task: Task,
+                             explain_out: Optional[List[dict]] = None
+                             ) -> Optional[List[Task]]:
         """Min-cost victim set on ONE device (flat host): per alive device,
         greedy-cover against that device's own ``device_feasible`` predicate,
         keep the cheapest feasible plan across devices. Greedy + prune, not
-        optimal subset-sum — the cost model only has to rank victims."""
+        optimal subset-sum — the cost model only has to rank victims.
+
+        With ``explain_out`` (a list, explain enabled), every per-device
+        planning outcome is appended: feasible plans with their victim uids
+        and cost, infeasible/over-budget attempts with the eligible-victim
+        count — the "considered and rejected" record of a preemption
+        verdict."""
         now = self._clock()
         best: Optional[List[Task]] = None
         best_cost = float("inf")
@@ -250,14 +263,35 @@ class PreemptionMixin:
             plan = self._greedy_plan_locked(
                 cands, lambda d=dev: self.device_feasible(task, d),
                 now, best_cost)
+            if explain_out is not None and len(explain_out) < self._PLANS_CAP:
+                if plan is not None:
+                    explain_out.append(
+                        {"device": dev.index + self._trace_dev_off,
+                         "victims": [v.uid for v in plan[0]],
+                         "cost_s": plan[1]})
+                else:
+                    explain_out.append(
+                        {"device": dev.index + self._trace_dev_off,
+                         "eligible": len(cands), "rejected": True})
             if plan is not None:
                 best, best_cost = plan
         return best
 
     # -- the hook -------------------------------------------------------------
     def _preempt_admit_locked(self, task: Task):
-        plan = self._plan_victims_locked(task)
+        ex = self._explain
+        considered: Optional[List[dict]] = [] if ex is not None else None
+        plan = self._plan_victims_locked(task, explain_out=considered)
         if not plan:
+            if ex is not None:
+                # collapse: a parked waiter retrying every drain keeps ONE
+                # no-plan verdict with a bumped repeat count (the first
+                # attempt's considered-plan record is retained)
+                ex.record(task.uid, task.name, obsx.PREEMPT_REJECTED,
+                          reasons=({"reason": obsx.R_NO_VICTIM_PLAN},),
+                          data={"considered": considered}
+                          if considered else None,
+                          collapse=True)
             return None
         toks = [self._evict_locked(v) for v in plan]
         placement = self._admit_locked(task)
@@ -268,13 +302,27 @@ class PreemptionMixin:
                 self._restore_locked(v, tok)
             return None
         now = self._clock()
+        if ex is not None:
+            ex.record(task.uid, task.name, obsx.PREEMPT_PLANNED,
+                      device=getattr(placement, "lead", placement)
+                      + self._trace_dev_off,
+                      data={"victims": [v.uid for v in plan],
+                            "cost_s": sum(self._victim_cost_locked(v, now)
+                                          for v in plan),
+                            "considered": considered})
         for v, tok in zip(plan, toks):
             since = self._resident_since.pop(v.uid, now)
             # bank remaining work BEFORE mutating the ledger entry it reads;
             # an estimate from residency time — the simulator's listener
             # overwrites it with the exact value
-            self.ledger.set_remaining(
-                v.uid, remaining_estimate(v, self.ledger, now - since))
+            rem = remaining_estimate(v, self.ledger, now - since)
+            if ex is not None:
+                ex.record(v.uid, v.name, obsx.EVICTED,
+                          device=self._tok_lead(tok) + self._trace_dev_off,
+                          reasons=({"reason": "preempted", "by": task.uid,
+                                    "by_name": task.name,
+                                    "cost_s": preemption_cost(v, rem)},))
+            self.ledger.set_remaining(v.uid, rem)
             v.preempt_count += 1
             if self.preempt_policy.aging_step:
                 # anti-starvation aging: each eviction raises the victim's
@@ -340,7 +388,9 @@ class GangPreemptionMixin(PreemptionMixin):
         return self.policy != "alg2" \
             or self.topo.link_headroom_ok(group, resources)
 
-    def _plan_victims_locked(self, task: Task) -> Optional[List[Task]]:
+    def _plan_victims_locked(self, task: Task,
+                             explain_out: Optional[List[dict]] = None
+                             ) -> Optional[List[Task]]:
         r = task.resources
         k = max(r.chips, 1)
         per_chip = r.hbm_bytes // k
@@ -352,6 +402,8 @@ class GangPreemptionMixin(PreemptionMixin):
         if not any(self._victim_ok_locked(task, t, now)
                    for d in self.devices if d.alive
                    for t in d.residents.values()):
+            if explain_out is not None:
+                explain_out.append({"eligible": 0, "rejected": True})
             return None
         best: Optional[List[Task]] = None
         best_cost = float("inf")
@@ -387,6 +439,16 @@ class GangPreemptionMixin(PreemptionMixin):
                 lambda g=group: self._group_admissible_locked(
                     g, per_chip, need, r),
                 now, best_cost, useful=useful)
+            if explain_out is not None and len(explain_out) < self._PLANS_CAP:
+                if plan is not None:
+                    explain_out.append(
+                        {"device": group.lead + self._trace_dev_off,
+                         "victims": [v.uid for v in plan[0]],
+                         "cost_s": plan[1]})
+                else:
+                    explain_out.append(
+                        {"device": group.lead + self._trace_dev_off,
+                         "eligible": len(cands), "rejected": True})
             if plan is not None:
                 best, best_cost = plan
         return best

@@ -58,6 +58,7 @@ from repro.core.scheduler.gang import GangScheduler
 from repro.core.task import Task
 from repro.core.topology import DCN_BW, ICI_BW, Cell, GangReservation
 from repro.obs import events as obs
+from repro.obs import explain as obsx
 
 DeviceRef = Union[int, Cell]
 
@@ -111,8 +112,10 @@ class ShardedScheduler:
         self.rehomes = 0         # waiters migrated off a shrunken shard
         # wrapper-level tracer (steal/restore events); obs.events.
         # attach_tracer also fans the tracer out to every shard with its
-        # global device-index offset
+        # global device-index offset; explain.attach_explainer does the
+        # same for the verdict rings
         self._trace = None
+        self._explain = None
 
     # -- global views ---------------------------------------------------------
     @property
@@ -212,6 +215,10 @@ class ShardedScheduler:
                     with self._lock:
                         self._owner[t.uid] = tsi
                         self.rehomes += 1
+                    ex = self._explain
+                    if ex is not None:
+                        ex.record(t.uid, t.name, obsx.REHOMED,
+                                  data={"src": si, "dst": tsi})
                     sh.admit_or_enqueue(t, wrapped)
                     return
                 user_cb(t, None, epoch)
@@ -325,8 +332,20 @@ class ShardedScheduler:
                 if tr is not None:
                     tr.emit(obs.RESTORE, w.task.uid, w.task.name,
                             data={"src": src_si, "dst": target_si})
+                ex = self._explain
+                if ex is not None:
+                    ex.record(w.task.uid, w.task.name, obsx.STEAL_REFUSED,
+                              reasons=({"reason": "target_refused",
+                                        "src": src_si,
+                                        "dst": target_si},),
+                              data={"src": src_si, "dst": target_si},
+                              collapse=True)
                 return
             self.steals += 1
+            ex = self._explain
+            if ex is not None:
+                ex.record(w.task.uid, w.task.name, obsx.STOLEN,
+                          data={"src": src_si, "dst": target_si})
 
     # -- fault tolerance -------------------------------------------------------
     def mark_dead(self, device: DeviceRef) -> List[Task]:
@@ -379,6 +398,15 @@ class ShardedScheduler:
     def waiting_tasks(self) -> List[Task]:
         # shard-major snapshot (rank-ordered within each shard)
         return [t for sh in self.shards for t in sh.waiting_tasks()]
+
+    def explain_queue(self, task: Task) -> Optional[Tuple[dict, ...]]:
+        """Live rejection probe routed to the owner shard (None when the
+        task is not parked anywhere in the fleet)."""
+        si = self._owner.get(task.uid)
+        if si is None:
+            return None
+        eq = getattr(self.shards[si], "explain_queue", None)
+        return eq(task) if eq is not None else None
 
     def cancel_wait(self, task: Task) -> bool:
         si = self._owner.get(task.uid)

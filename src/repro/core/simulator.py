@@ -418,7 +418,7 @@ class Simulator:
         tr = getattr(self.sched, "_trace", None)
         if tr is not None:
             tr.emit(obs.SUBMIT, task.uid, task.name,
-                    data={"job": js.job.name})
+                    data=obs.submit_data(task, js.job.name, js.job.uid))
         if not self.sched.can_ever_fit(task):
             # never feasible (oversized footprint, or a gang shape the
             # topology cannot hold): fail fast with the scheduler's
@@ -592,6 +592,9 @@ class Simulator:
             return
         _, dead = self._failure_pending
         self._failure_pending = None
+        self._fail_device(dead)
+
+    def _fail_device(self, dead) -> None:
         # mark_dead re-enqueues evicted tasks through the waiter queue with
         # eviction-restart priority; their admission callback may already
         # have fired onto a surviving device (admitted_buf)
@@ -602,6 +605,21 @@ class Simulator:
                 # restart from scratch on another device (task-level
                 # checkpoint/restart is the executor's job)
                 self._blocked.setdefault(t.uid, rec.job)
+
+    def inject_failure(self, device) -> None:
+        """Kill ``device`` at the CURRENT virtual time — the external
+        fault-injection hook (``obs.whatif`` replays recorded MARK_DEAD
+        events through this; unlike ``_failure_pending`` it supports any
+        number of deaths per run). Same semantics as the scheduled path:
+        residents are evicted, stop progressing, and re-park."""
+        self._fail_device(device)
+        self._try_start()
+
+    def revive_device(self, device) -> None:
+        """Bring ``device`` back at the current virtual time (the REVIVE
+        counterpart of ``inject_failure``)."""
+        self.sched.revive(device)
+        self._try_start()
 
     def _complete_finished(self) -> None:
         done = [uid for uid, r in self._running.items()

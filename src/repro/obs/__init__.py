@@ -6,15 +6,28 @@ ring-buffer ``Tracer`` collects it with monotonic sequence numbers on the
 backend's own timeline (wall monotonic live, virtual clock simulated).
 
   * ``obs.events``  — the schema, the ``Tracer``, and ``attach_tracer``
+  * ``obs.explain`` — per-task decision-verdict rings (why parked, who
+    evicted it, at what cost) and ``attach_explainer``
   * ``obs.export``  — Chrome/Perfetto trace-event JSON (device occupancy
     tracks, queue-depth counters, cross-device flow arrows)
   * ``obs.metrics`` — log-bucketed histograms + counter/gauge registry
   * ``obs.replay``  — flight recorder + sim/live parity differ +
     lifecycle state-machine validator
+  * ``obs.slo``     — rolling-window SLO burn rates, degradation alerts
+    (the paper's 2.5% envelope, live), Prometheus text exposition
+  * ``obs.whatif``  — counterfactual replay of a recorded trace under
+    alternate scheduler policies, with decision-level divergence diffs
 
-The subsystem imports nothing from ``repro.core`` so the scheduler base can
-import it without cycles, and a ``None`` tracer keeps every emission site a
-single attribute load (the PR-6 hot-path budget survives tracing disabled).
+The subsystem imports nothing from ``repro.core`` at module load so the
+scheduler base can import it without cycles (``obs.whatif`` imports the
+simulator lazily inside ``replay``), and a ``None`` tracer/explainer
+keeps every emission site a single attribute load (the PR-6 hot-path
+budget survives tracing disabled).
 """
-from repro.obs import events, export, metrics, replay  # noqa: F401
+from repro.obs import (  # noqa: F401
+    events, explain, export, metrics, replay, slo, whatif,
+)
 from repro.obs.events import Event, Tracer, attach_tracer  # noqa: F401
+from repro.obs.explain import (  # noqa: F401
+    Explainer, Verdict, attach_explainer, format_verdicts,
+)

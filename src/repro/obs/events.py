@@ -217,6 +217,34 @@ class Tracer:
                 f"dropped={self.dropped}, enabled={self.enabled})")
 
 
+def submit_data(task: Any, job_name: str, job_uid: int) -> dict:
+    """Build the SUBMIT event's data payload.
+
+    Carries everything a counterfactual replay needs to reconstruct the
+    submission (``obs.whatif``): the job identity, the task's admission
+    class (priority / absolute deadline / gang label) and its full
+    resource vector. Duck-typed on ``Task`` so the obs package keeps its
+    no-core-imports rule; both backends call this at their (cold,
+    per-task) submit sites.
+    """
+    r = task.resources
+    return {
+        "job": job_name,
+        "job_uid": job_uid,
+        "priority": task.priority,
+        "deadline_t": task.deadline_t,
+        "gang_id": task.gang_id,
+        "hbm_bytes": r.hbm_bytes,
+        "flops": r.flops,
+        "bytes_accessed": r.bytes_accessed,
+        "collective_bytes": r.collective_bytes,
+        "est_seconds": r.est_seconds,
+        "core_demand": r.core_demand,
+        "bw_demand": r.bw_demand,
+        "chips": r.chips,
+    }
+
+
 def attach_tracer(sched: Any, tracer: Tracer) -> Tracer:
     """Point every emission site of ``sched`` at ``tracer``.
 

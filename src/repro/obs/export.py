@@ -35,7 +35,18 @@ _UNPARKS = (ev.ADMIT, ev.GROW, ev.SHED, ev.CRASH, ev.STEAL)
 _QUEUE_PID = 1_000_000  # synthetic process row for the counter track
 
 
-def to_chrome_trace(events: Sequence[ev.Event]) -> dict:
+def device_track_name(d: int, devices_per_pod: Optional[int] = None) -> str:
+    """Display name for device ``d``'s process row. With
+    ``devices_per_pod`` (a sharded/multi-pod fleet) the flat global index
+    is factored into ``pod{p}/dev{d}`` so Perfetto groups tracks by pod;
+    a flat fleet keeps the historical ``device N``."""
+    if devices_per_pod and devices_per_pod > 0:
+        return f"pod{d // devices_per_pod}/dev{d % devices_per_pod}"
+    return f"device {d}"
+
+
+def to_chrome_trace(events: Sequence[ev.Event], *,
+                    devices_per_pod: Optional[int] = None) -> dict:
     """Fold an event window into a Chrome trace-event document (dict)."""
     if not events:
         return {"traceEvents": [], "displayTimeUnit": "ms"}
@@ -48,7 +59,7 @@ def to_chrome_trace(events: Sequence[ev.Event]) -> dict:
     devices = sorted({e.device for e in events if e.device >= 0})
     for d in devices:
         out.append({"ph": "M", "pid": d, "tid": 0, "name": "process_name",
-                    "args": {"name": f"device {d}"}})
+                    "args": {"name": device_track_name(d, devices_per_pod)}})
     out.append({"ph": "M", "pid": _QUEUE_PID, "tid": 0,
                 "name": "process_name", "args": {"name": "scheduler queue"}})
 
@@ -86,7 +97,12 @@ def to_chrome_trace(events: Sequence[ev.Event]) -> dict:
             flows += 1
 
     # -- waiter-depth counter ----------------------------------------------
+    # Coalesced: a park+admit pair at one timestamp collapses to its final
+    # depth (keep-last per ts), and a sample equal to the last emitted
+    # depth is skipped entirely — a steal/restore churn that nets to zero
+    # adds NO counter rows instead of a same-value sawtooth.
     parked: set = set()
+    samples: List[Tuple[float, int]] = []
     for e in events:
         if e.uid < 0:
             continue
@@ -96,8 +112,18 @@ def to_chrome_trace(events: Sequence[ev.Event]) -> dict:
         elif e.kind in _UNPARKS:
             parked.discard(e.uid)
         if len(parked) != n0:
-            out.append({"ph": "C", "pid": _QUEUE_PID, "name": "waiters",
-                        "ts": us(e.t), "args": {"depth": len(parked)}})
+            ts = us(e.t)
+            if samples and samples[-1][0] == ts:
+                samples[-1] = (ts, len(parked))
+            else:
+                samples.append((ts, len(parked)))
+    last_depth: Optional[int] = None
+    for ts, depth in samples:
+        if depth == last_depth:
+            continue
+        last_depth = depth
+        out.append({"ph": "C", "pid": _QUEUE_PID, "name": "waiters",
+                    "ts": ts, "args": {"depth": depth}})
 
     return {"traceEvents": out, "displayTimeUnit": "ms"}
 
@@ -112,10 +138,11 @@ def _close(open_slice: dict, closed: dict, uid: int, t: float,
         "args": {"uid": uid, "end": why}})
 
 
-def write_chrome_trace(events: Sequence[ev.Event], path: str) -> dict:
+def write_chrome_trace(events: Sequence[ev.Event], path: str, *,
+                       devices_per_pod: Optional[int] = None) -> dict:
     """Export ``events`` to a Perfetto-loadable JSON file; returns the
     document so callers can validate/summarize without re-reading it."""
-    doc = to_chrome_trace(events)
+    doc = to_chrome_trace(events, devices_per_pod=devices_per_pod)
     with open(path, "w") as f:
         json.dump(doc, f)
     return doc
@@ -137,11 +164,24 @@ def validate_chrome_trace(doc: dict) -> List[str]:
         return ["traceEvents missing or not a list"]
     flow_s: Dict[int, int] = {}
     flow_f: Dict[int, int] = {}
+    track_names: Dict[str, int] = {}   # process_name -> first pid
     for i, r in enumerate(evs):
         ph = r.get("ph")
         if ph not in _KNOWN_PH:
             problems.append(f"[{i}] unknown ph {ph!r}")
             continue
+        if ph == "M" and r.get("name") == "process_name":
+            # two process rows sharing one display name render as ONE
+            # merged track in Perfetto — pod-qualified names must be
+            # unique per pid (the sharded-fleet regression this guards)
+            nm = (r.get("args") or {}).get("name")
+            pid = r.get("pid")
+            if nm in track_names and track_names[nm] != pid:
+                problems.append(
+                    f"[{i}] duplicate track name {nm!r} for pid {pid} "
+                    f"(already names pid {track_names[nm]})")
+            elif nm is not None:
+                track_names[nm] = pid
         if ph == "X":
             if not all(k in r for k in ("pid", "ts", "dur", "name")):
                 problems.append(f"[{i}] X slice missing pid/ts/dur/name")

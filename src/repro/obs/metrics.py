@@ -40,6 +40,9 @@ class Histogram:
         self.min = math.inf
         self.max = -math.inf
         self.overflow = 0
+        # streaming observers (obs.slo alert hooks): called with each
+        # recorded value. Empty list costs one truthiness check per record.
+        self.observers: List = []
 
     def record(self, value: float) -> None:
         self.n += 1
@@ -56,6 +59,10 @@ class Histogram:
                 i = len(self.counts) - 1
                 self.overflow += 1
         self.counts[i] += 1
+        obs_fns = self.observers
+        if obs_fns:
+            for fn in obs_fns:
+                fn(value)
 
     def bucket_bounds(self, i: int) -> tuple:
         """(lo, hi) of bucket ``i`` (bucket 0 is [0, least))."""
@@ -146,6 +153,12 @@ class MetricsRegistry:
         if g is None:
             g = self._gauges[name] = Gauge()
         return g
+
+    def on_record(self, name: str, fn) -> None:
+        """Subscribe ``fn(value)`` to every future record on histogram
+        ``name`` (get-or-create) — the live-alert hook ``obs.slo`` uses
+        to watch TTFT/TPOT streams without polling snapshots."""
+        self.hist(name).observers.append(fn)
 
     def snapshot(self) -> dict:
         return {

@@ -185,11 +185,19 @@ def validate_lifecycles(events: Sequence[ev.Event],
 class FlightRecorder:
     """Dump the tracer's surviving ring window to disk on notable
     moments (crash, drain) — a post-mortem of the last N decisions.
-    ``dump`` is idempotent per reason unless ``always=True``."""
+    ``dump`` is idempotent per reason unless ``always=True``.
 
-    def __init__(self, tracer: ev.Tracer, path: str = "flight.json"):
+    Each dump also carries the tracer's drop counter (how much history
+    the ring already lost — the post-mortem's own error bar) and a
+    metrics snapshot: the attached ``registry``'s if one was passed,
+    otherwise one derived from the surviving window itself
+    (``metrics_from_events``) so a dump is never metric-less."""
+
+    def __init__(self, tracer: ev.Tracer, path: str = "flight.json",
+                 registry=None):
         self.tracer = tracer
         self.path = path
+        self.registry = registry
         self.dumps: List[Tuple[str, str]] = []  # (reason, path)
 
     def dump(self, reason: str, *, always: bool = False) -> Optional[str]:
@@ -198,11 +206,18 @@ class FlightRecorder:
         base, ext = os.path.splitext(self.path)
         path = f"{base}.{reason}{ext or '.json'}" \
             if len(self.dumps) or always else self.path
+        events = self.tracer.events()
+        if self.registry is not None:
+            metrics = self.registry.snapshot()
+        else:
+            from repro.obs.metrics import metrics_from_events
+            metrics = metrics_from_events(events).snapshot()
         doc = {
             "reason": reason,
             "emitted": self.tracer.emitted,
             "dropped": self.tracer.dropped,
-            "events": [e._asdict() for e in self.tracer.events()],
+            "metrics": metrics,
+            "events": [e._asdict() for e in events],
         }
         with open(path, "w") as f:
             json.dump(doc, f)

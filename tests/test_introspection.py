@@ -1,0 +1,615 @@
+"""Scheduler introspection battery (ISSUE 9 tentpole): decision
+explainability, counterfactual what-if replay, live SLO monitoring.
+
+  * ``Explainer`` ring mechanics: bounded per-task windows, task-map
+    eviction, rejection-episode collapse, lazy reason walks;
+  * seeded properties: every parked waiter carries at least one
+    structured rejection reason for every device the probe attempted;
+    every admitted task's final placement verdict matches the placement
+    the tracer recorded; every preemption eviction names the real
+    preemptor (cross-checked against ``preempt_log``); device-death
+    evictions say so; sharded steal refusals and successes are
+    explained;
+  * what-if fidelity: a same-policy replay of a recorded trace
+    reproduces the original admission/eviction sequence EXACTLY
+    (``diff_streams`` is silent) on overload, gang, and device-death
+    traces; counterfactual legs report metric deltas and the first
+    divergent decision;
+  * SLO monitor: burn-rate math, edge-triggered alerts (one per
+    violation episode), registry subscription, the paper's 2.5%
+    slowdown envelope, Prometheus text exposition;
+  * export regressions: pod-qualified track names on sharded fleets,
+    duplicate-track detection, queue-depth counter coalescing;
+  * the flight recorder's metrics/drop-counter dump fields and the
+    ``repro-top`` ASCII dashboard.
+"""
+import json
+import random
+
+from _hypothesis_fallback import given, settings, st
+
+from repro.core.cluster import Cluster
+from repro.core.scheduler import (
+    GangScheduler, MGBAlg3Scheduler, PreemptiveAlg3Scheduler,
+    ShardedScheduler,
+)
+from repro.core.task import Job, ResourceVector, Task, UnitTask
+from repro.core.workloads import gang_mix, overload_mix
+from repro.launch import top
+from repro.obs import events as ev
+from repro.obs import explain as obsx
+from repro.obs import whatif
+from repro.obs.events import Tracer, attach_tracer
+from repro.obs.explain import Explainer, attach_explainer, format_verdicts
+from repro.obs.export import to_chrome_trace, validate_chrome_trace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.replay import diff_streams
+from repro.obs.slo import SLOAlert, SLOMonitor, prometheus_text
+
+GB = 1024**3
+
+
+def mk_task(name, mem_gb=2.0, demand=0.5, chips=1, est=1.0):
+    vec = ResourceVector(hbm_bytes=int(mem_gb * GB), flops=1e12,
+                         bytes_accessed=1e9, est_seconds=est,
+                         core_demand=demand, bw_demand=demand, chips=chips)
+    return Task(units=[UnitTask(fn=None, memobjs=frozenset({name}),
+                                resources=vec, name=name)], name=name)
+
+
+def mk_job(name, mem_gb=2.0, est=1.0, chips=1):
+    return Job(tasks=[mk_task(name, mem_gb=mem_gb, est=est, chips=chips)],
+               name=name)
+
+
+# ---------------------------------------------------------------------------
+# Explainer mechanics
+# ---------------------------------------------------------------------------
+
+def test_explainer_ring_is_bounded_per_task():
+    ex = Explainer(per_task=4, clock=lambda: 0.0)
+    for i in range(10):
+        ex.record(1, "t", obsx.ADMITTED, device=i)
+    vs = ex.verdicts(1)
+    assert len(vs) == 4
+    assert [v.device for v in vs] == [6, 7, 8, 9]   # last-K wins
+    assert ex.recorded == 10
+
+
+def test_explainer_task_map_evicts_oldest():
+    ex = Explainer(max_tasks=2, clock=lambda: 0.0)
+    for uid in (1, 2, 3):
+        ex.record(uid, f"t{uid}", obsx.ADMITTED)
+    assert ex.verdicts(1) == []        # oldest-inserted ring dropped
+    assert ex.verdicts(2) and ex.verdicts(3)
+    assert ex.evicted_tasks == 1
+
+
+def test_reject_is_lazy_and_collapses_the_episode():
+    ex = Explainer(clock=lambda: 0.0)
+    walks = []
+
+    def reasons():
+        walks.append(1)
+        return ({"reason": obsx.R_SLOTS_FULL},)
+    for _ in range(5):
+        ex.reject(7, "w", reasons)
+    (v,) = ex.verdicts(7)
+    assert v.action == obsx.REJECTED and v.repeats == 5
+    assert len(walks) == 1             # the device walk ran ONCE
+    # an admission ends the episode; the next rejection walks again
+    ex.record(7, "w", obsx.ADMITTED, device=0)
+    ex.reject(7, "w", reasons)
+    assert len(walks) == 2
+
+
+def test_skip_extends_the_open_parked_episode():
+    ex = Explainer(clock=lambda: 0.0)
+    ex.reject(7, "w", lambda: ({"reason": obsx.R_MEMORY_SHORT},))
+    for _ in range(3):
+        ex.skip(7, "w", ({"reason": obsx.R_HINT_SKIP},))
+    (v,) = ex.verdicts(7)              # no second verdict appended
+    assert v.action == obsx.REJECTED and v.repeats == 4
+    # a fresh episode (post-admission) materializes a SKIPPED verdict
+    ex.record(7, "w", obsx.ADMITTED, device=0)
+    ex.skip(7, "w", ({"reason": obsx.R_CLASS_MEMO},))
+    assert ex.last(7).action == obsx.SKIPPED
+
+
+def test_annotate_last_and_format():
+    ex = Explainer(clock=lambda: 0.0)
+    ex.record(1, "t", obsx.ADMITTED, device=3)
+    ex.annotate_last(1, "class_memo_skip", 12)
+    v = ex.last(1)
+    assert v.data == {"class_memo_skip": 12}
+    text = format_verdicts(ex.verdicts(1))
+    assert "admitted" in text and "dev" in text
+
+
+def test_attach_explainer_fans_out_to_shards():
+    sched = ShardedScheduler(pods=2, rows=2, cols=2)
+    ex = attach_explainer(sched, Explainer())
+    assert sched._explain is ex
+    offs = []
+    for sh in sched.shards:
+        assert sh._explain is ex
+        offs.append(sh._trace_dev_off)
+    assert offs == [0, 4]              # global device bases stamped
+
+
+# ---------------------------------------------------------------------------
+# property: parked waiters carry structured reasons per attempted device
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_parked_waiters_have_reasons_per_device(seed):
+    rng = random.Random(seed)
+    c = Cluster(MGBAlg3Scheduler(2), workers=8, backend="sim", trace=True)
+    handles = []
+    # two hogs fill the fleet; the rest must park with explanations
+    for i in range(6):
+        handles.append(c.submit(mk_job(
+            f"j{i}", mem_gb=14.0 if i < 2 else rng.choice([6.0, 10.0]),
+            est=50.0)))
+    c.run_until(1.0)
+    queued = [h for h in handles if h.status.name == "QUEUED"]
+    assert queued, "fixture must overload the fleet"
+    alive = [d.index for d in c.sched.devices if d.alive]
+    for h in queued:
+        for name, verdicts in c.explain(h).items():
+            rejects = [v for v in verdicts if v.action == obsx.REJECTED]
+            assert rejects, f"{name}: parked without a rejection verdict"
+            # the freshest rejection explains EVERY attempted device
+            last = rejects[-1]
+            assert last.reasons
+            seen = {r.get("device") for r in last.reasons}
+            assert seen == set(alive), (name, last.reasons)
+            for r in last.reasons:
+                assert r["reason"] in (obsx.R_MEMORY_SHORT,
+                                       obsx.R_SLOTS_FULL,
+                                       obsx.R_MAX_RESIDENTS,
+                                       obsx.R_DEVICE_DEAD), r
+    c.drain()
+
+
+def test_explain_requires_explainer():
+    import pytest
+    c = Cluster(MGBAlg3Scheduler(1), workers=2, backend="sim",
+                explain=False)
+    h = c.submit(mk_job("x", est=0.1))
+    with pytest.raises(RuntimeError):
+        c.explain(h)
+    c.drain()
+
+
+# ---------------------------------------------------------------------------
+# property: final verdict matches actual placement
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_admitted_verdict_matches_traced_placement(seed):
+    rng = random.Random(seed)
+    c = Cluster(PreemptiveAlg3Scheduler(2), workers=8, backend="sim",
+                shed_late=True, trace=True,
+                explain=Explainer(per_task=64))
+    c._sim._failure_pending = (rng.uniform(0.3, 0.8), rng.randrange(2))
+    for i in range(10):
+        c.submit(mk_job(f"j{i}", mem_gb=rng.choice([4.0, 9.0, 12.0]),
+                        est=rng.uniform(0.2, 1.5)),
+                 priority=rng.randrange(3),
+                 deadline_s=rng.choice([None, 2.0, 10.0]))
+    c.run_until(2.0)
+    c.sched.revive(0)
+    c.sched.revive(1)
+    c.drain()
+    # last ADMIT event per task == last admitted/grown verdict's device
+    last_admit = {}
+    for e in c.trace.events():
+        if e.kind == ev.ADMIT:
+            last_admit[e.uid] = e.device
+    checked = 0
+    for uid, dev in last_admit.items():
+        placed = [v for v in c.explainer.verdicts(uid)
+                  if v.action in (obsx.ADMITTED, obsx.GROWN)]
+        assert placed, f"uid {uid} admitted without a placement verdict"
+        assert placed[-1].device == dev
+        checked += 1
+    assert checked >= 1
+
+
+# ---------------------------------------------------------------------------
+# property: evictions name the real cause
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000))
+def test_eviction_verdicts_name_the_real_preemptor(seed):
+    rng = random.Random(seed)
+    c = Cluster(PreemptiveAlg3Scheduler(2), workers=8, backend="sim",
+                shed_late=True, trace=True,
+                explain=Explainer(per_task=64))
+    rows = overload_mix(seed, n_background=6, n_bystander=2, n_urgent=10)
+    for row in rows:
+        c.run_until(row["t"])
+        c.submit(row["job"], priority=row["priority"],
+                 deadline_s=row["deadline_s"])
+    c.drain()
+    log = c.sched.preempt_log
+    assert log, "overload fixture must preempt"
+    for victim_uid, preemptor_uid in log:
+        evs = [v for v in c.explainer.verdicts(victim_uid)
+               if v.action == obsx.EVICTED]
+        assert evs, f"victim {victim_uid} evicted without explanation"
+        assert any(r.get("by") == preemptor_uid and "cost_s" in r
+                   and r["reason"] == "preempted"
+                   for v in evs for r in v.reasons), (victim_uid, evs)
+
+
+def test_device_death_evictions_say_so():
+    c = Cluster(PreemptiveAlg3Scheduler(2), workers=8, backend="sim",
+                trace=True)
+    c._sim._failure_pending = (0.5, 0)
+    for i in range(4):
+        c.submit(mk_job(f"j{i}", mem_gb=12.0, est=2.0))
+    c.run_until(1.0)
+    c.sched.revive(0)
+    c.drain()
+    dead_evicts = [e.uid for e in c.trace.events()
+                   if e.kind == ev.EVICT
+                   and e.data and e.data.get("cause") == "device_dead"]
+    assert dead_evicts
+    for uid in dead_evicts:
+        assert any(v.action == obsx.EVICTED
+                   and any(r["reason"] == obsx.R_DEVICE_DEAD
+                           for r in v.reasons)
+                   for v in c.explainer.verdicts(uid))
+
+
+# ---------------------------------------------------------------------------
+# sharded: steal refusals and successes are explained
+# ---------------------------------------------------------------------------
+
+def _sharded_fixture():
+    sched = ShardedScheduler(pods=2, rows=2, cols=2)
+    tracer = attach_tracer(sched, Tracer())
+    ex = attach_explainer(sched, Explainer())
+    placed = []
+
+    def cb(t, p, epoch):
+        if p is not None and not isinstance(p, int):
+            p = p.lead
+        placed.append((t, p))
+    singles = [mk_task(f"s{i}", mem_gb=16.0) for i in range(8)]
+    for t in singles:
+        assert sched.admit_or_enqueue(t, cb)
+    return sched, tracer, ex, placed, cb
+
+
+def test_steal_refusal_and_success_verdicts():
+    sched, tracer, ex, placed, cb = _sharded_fixture()
+    gang = mk_task("gang", mem_gb=16.0, chips=2)
+    sched.admit_or_enqueue(gang, cb)
+    si = sched._owner[gang.uid]
+    other = 1 - si
+    on_other = [t for t, p in placed if p // 4 == other]
+    # one free cell on the other shard: the 2-chip steal must be refused
+    sched.task_end(on_other[0])
+    acts = [v.action for v in ex.verdicts(gang.uid)]
+    assert obsx.STEAL_REFUSED in acts and obsx.STOLEN not in acts
+    refusal = next(v for v in ex.verdicts(gang.uid)
+                   if v.action == obsx.STEAL_REFUSED)
+    assert refusal.reasons[0]["reason"] == "target_refused"
+    assert refusal.data == {"src": si, "dst": other}
+    assert any(e.kind == ev.RESTORE for e in tracer.events())
+    # second free cell: now the steal lands, and says where it went
+    sched.task_end(on_other[1])
+    verdicts = ex.verdicts(gang.uid)
+    stolen = next(v for v in verdicts if v.action == obsx.STOLEN)
+    assert stolen.data == {"src": si, "dst": other}
+    assert any(v.action == obsx.ADMITTED for v in verdicts)
+    assert sched.steals == 1
+
+
+def test_sharded_explain_queue_probes_owner_shard():
+    sched, tracer, ex, placed, cb = _sharded_fixture()
+    w = mk_task("parked", mem_gb=16.0)
+    sched.admit_or_enqueue(w, cb)
+    reasons = sched.explain_queue(w)
+    assert reasons and all("reason" in r for r in reasons)
+    assert sched.explain_queue(mk_task("stranger")) is None
+
+
+# ---------------------------------------------------------------------------
+# what-if replay: same-policy round-trip is exact
+# ---------------------------------------------------------------------------
+
+def _record_overload(seed):
+    c = Cluster(PreemptiveAlg3Scheduler(2), workers=8, backend="sim",
+                shed_late=True, trace=True)
+    rows = overload_mix(seed, n_background=5, n_bystander=2, n_urgent=8)
+    for row in rows:
+        c.run_until(row["t"])
+        c.submit(row["job"], priority=row["priority"],
+                 deadline_s=row["deadline_s"])
+    c._sim.drain(1e7)
+    return c.trace.events()
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_whatif_roundtrip_exact_on_overload(seed):
+    events = _record_overload(seed)
+    res = whatif.replay(events, lambda: PreemptiveAlg3Scheduler(2),
+                        workers=8, shed_late=True)
+    assert diff_streams(events, res.events) is None
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_whatif_roundtrip_exact_on_gangs(seed):
+    c = Cluster(GangScheduler(pods=1, rows=2, cols=4), workers=32,
+                backend="sim", trace=True)
+    for j in gang_mix(seed, n_singles=4, n_gangs=4, chip_choices=(2, 4),
+                      probe_singles=False):
+        c.submit(j)
+    c._sim.drain(1e7)
+    events = c.trace.events()
+    res = whatif.replay(events, lambda: GangScheduler(pods=1, rows=2,
+                                                      cols=4), workers=32)
+    assert diff_streams(events, res.events) is None
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_whatif_roundtrip_exact_through_device_death(seed):
+    rng = random.Random(seed)
+    c = Cluster(PreemptiveAlg3Scheduler(2), workers=8, backend="sim",
+                trace=True)
+    c._sim._failure_pending = (rng.uniform(0.3, 0.8), rng.randrange(2))
+    for i in range(8):
+        c.submit(mk_job(f"j{i}", mem_gb=rng.choice([4.0, 9.0, 12.0]),
+                        est=rng.uniform(0.3, 1.5)),
+                 priority=rng.randrange(2))
+    c.run_until(2.0)
+    c.sched.revive(0)
+    c.sched.revive(1)
+    c._sim.drain(1e7)
+    events = c.trace.events()
+    # the death and both revives ride the trace as fleet ops
+    trace = whatif.reconstruct(events)
+    assert any(op.kind == ev.MARK_DEAD for op in trace.fleet_ops)
+    res = whatif.replay(trace, lambda: PreemptiveAlg3Scheduler(2),
+                        workers=8)
+    assert diff_streams(events, res.events) is None
+
+
+def test_whatif_reconstruct_requires_enriched_submits():
+    import pytest
+    tr = Tracer(clock=lambda: 0.0)
+    tr.emit(ev.SUBMIT, uid=1, name="x", data={"job": "x"})  # no vector
+    with pytest.raises(ValueError):
+        whatif.reconstruct(tr.events())
+
+
+def test_whatif_compare_reports_deltas_and_divergence():
+    events = _record_overload(3)
+    report = whatif.compare(
+        events,
+        {"replay": {},
+         "fifo": {"use_priorities": False, "use_deadlines": False}},
+        scheduler_factory=lambda: PreemptiveAlg3Scheduler(2),
+        workers=8, shed_late=True)
+    base = report["baseline"]
+    assert base["deadline_jobs"] > 0
+    same = report["policies"]["replay"]
+    assert same["first_divergence"] is None
+    assert abs(same["delta"]["makespan_s"]) < 1e-9
+    fifo = report["policies"]["fifo"]
+    assert set(fifo["delta"]) == {"makespan_s", "deadline_met",
+                                  "p99_queueing_s", "evictions"}
+    # stripping priorities + deadlines must change SOME decision here
+    assert fifo["first_divergence"] is not None
+
+
+# ---------------------------------------------------------------------------
+# SLO monitor
+# ---------------------------------------------------------------------------
+
+def test_burn_rate_math():
+    mon = SLOMonitor(window=10, deadline_target=0.8, clock=lambda: 0.0)
+    for _ in range(9):
+        mon.note_deadline(True)
+    mon.note_deadline(False)
+    s = mon.status()["deadline"]
+    # 1 violation / 10 over a 0.2 budget = burn 0.5: inside budget
+    assert abs(s["rate"] - 0.1) < 1e-9
+    assert abs(s["burn"] - 0.5) < 1e-9
+    assert s["healthy"]
+    for _ in range(2):                 # 3/10 over 0.2 = burn 1.5
+        mon.note_deadline(False)
+    assert abs(mon.status()["deadline"]["burn"] - 1.5) < 1e-9
+    assert not mon.healthy
+
+
+def test_alerts_fire_once_per_violation_episode():
+    fired = []
+    mon = SLOMonitor(window=4, deadline_target=0.5, clock=lambda: 0.0,
+                     on_alert=fired.append)
+    for _ in range(8):                     # sustained violation: ONE alert
+        mon.note_deadline(False)
+    assert len(fired) == 1
+    assert isinstance(fired[0], SLOAlert)
+    assert fired[0].stream == "deadline"
+    for _ in range(8):                     # recovery closes the episode
+        mon.note_deadline(True)
+    assert mon.healthy
+    for _ in range(8):                     # a fresh episode re-alerts
+        mon.note_deadline(False)
+    assert len(fired) == 2
+    assert mon.status()["alerts"] == 2
+
+
+def test_slowdown_envelope_is_the_papers():
+    from repro.obs.slo import SLOWDOWN_ENVELOPE
+    assert SLOWDOWN_ENVELOPE == 0.025
+    mon = SLOMonitor(window=4, latency_target=0.5, clock=lambda: 0.0)
+    mon.note_slowdown("ok", observed_s=1.02, roofline_s=1.0)
+    assert mon.status()["slowdown"]["rate"] == 0.0
+    for _ in range(4):
+        mon.note_slowdown("bad", observed_s=1.06, roofline_s=1.0)
+    assert not mon.status()["slowdown"]["healthy"]
+    worst = mon.status()["worst_slowdown"]
+    assert worst["name"] == "bad" and abs(worst["factor"] - 1.06) < 1e-9
+
+
+def test_for_serving_subscribes_to_registry():
+    reg = MetricsRegistry()
+    mon = SLOMonitor.for_serving(reg, window=8, ttft_slo_s=0.5,
+                                 tpot_slo_s=0.1, clock=lambda: 0.0)
+    reg.hist("ttft_s").record(0.2)     # fine
+    reg.hist("ttft_s").record(0.9)     # violation
+    reg.hist("tpot_s").record(0.05)
+    st_ = mon.status()
+    assert st_["ttft"]["n"] == 2 and abs(st_["ttft"]["rate"] - 0.5) < 1e-9
+    assert st_["tpot"]["n"] == 1 and st_["tpot"]["rate"] == 0.0
+
+
+def test_prometheus_text_exposition():
+    reg = MetricsRegistry()
+    reg.counter("events.admit").inc(3)
+    reg.gauge("queue_depth").set(7)
+    reg.hist("queueing_delay_s").record(0.25)
+    mon = SLOMonitor(window=4, clock=lambda: 0.0)
+    mon.note_deadline(True)
+    text = prometheus_text(reg, mon)
+    assert "repro_events_admit_total 3" in text
+    assert "repro_queue_depth 7" in text
+    assert 'repro_queueing_delay_s{quantile="0.99"}' in text
+    assert "repro_queueing_delay_s_count 1" in text
+    assert "repro_slo_deadline_burn 0" in text
+    assert "repro_slo_deadline_healthy 1" in text
+    assert text.endswith("\n")
+
+
+# ---------------------------------------------------------------------------
+# export regressions: pod tracks, duplicate names, counter coalescing
+# ---------------------------------------------------------------------------
+
+def test_pod_qualified_track_names_on_sharded_trace():
+    sched, tracer, ex, placed, cb = _sharded_fixture()
+    for t, _ in list(placed):
+        sched.task_end(t)
+    doc = to_chrome_trace(tracer.events(), devices_per_pod=4)
+    assert not validate_chrome_trace(doc)
+    names = {(r["args"] or {}).get("name") for r in doc["traceEvents"]
+             if r.get("ph") == "M" and r.get("name") == "process_name"}
+    assert "pod0/dev0" in names and "pod1/dev3" in names
+    assert not any(n and n.startswith("device ") for n in names)
+
+
+def test_validator_flags_duplicate_track_names():
+    doc = {"traceEvents": [
+        {"ph": "M", "pid": 0, "tid": 0, "name": "process_name",
+         "args": {"name": "pod0/dev0"}},
+        {"ph": "M", "pid": 4, "tid": 0, "name": "process_name",
+         "args": {"name": "pod0/dev0"}},     # wrong pod factoring
+    ]}
+    problems = validate_chrome_trace(doc)
+    assert any("duplicate track name" in p for p in problems)
+
+
+def test_queue_counter_coalesces_unchanged_depth():
+    tr = Tracer(clock=lambda: 0.0)
+    now = [0.0]
+    tr.use_clock(lambda: now[0])
+    tr.emit(ev.PARK, uid=1, name="a")          # depth 1
+    now[0] = 1.0
+    tr.emit(ev.PARK, uid=2, name="b")          # depth 2 ...
+    tr.emit(ev.ADMIT, uid=2, name="b", device=0)   # ... back to 1, same ts
+    now[0] = 2.0
+    tr.emit(ev.STEAL, uid=1, name="a")         # unpark ...
+    tr.emit(ev.RESTORE, uid=1, name="a")       # ... repark: nets to 1
+    now[0] = 3.0
+    tr.emit(ev.ADMIT, uid=1, name="a", device=1)   # depth 0
+    counters = [r for r in to_chrome_trace(tr.events())["traceEvents"]
+                if r.get("ph") == "C"]
+    # only real depth CHANGES appear: 1 (t=0) and 0 (t=3)
+    assert [(r["ts"], r["args"]["depth"]) for r in counters] == \
+        [(0.0, 1), (3e6, 0)]
+
+
+# ---------------------------------------------------------------------------
+# flight recorder dump fields
+# ---------------------------------------------------------------------------
+
+def test_flight_dump_carries_drop_counter_and_metrics(tmp_path):
+    flight = str(tmp_path / "flight.json")
+    reg = MetricsRegistry()
+    reg.counter("custom").inc(5)
+    c = Cluster(MGBAlg3Scheduler(1), workers=2, backend="sim",
+                trace=Tracer(capacity=4),    # tiny ring: forces drops
+                flight_path=flight, metrics=reg)
+    for i in range(4):
+        c.submit(mk_job(f"j{i}", est=0.1))
+    c.drain()
+    assert c.flight.dumps
+    doc = json.loads(open(c.flight.dumps[-1][1]).read())
+    assert doc["dropped"] > 0                  # the ring really dropped
+    assert doc["emitted"] > doc["dropped"]
+    assert doc["metrics"]["counters"]["custom"] == 5
+
+
+def test_flight_dump_derives_metrics_without_registry(tmp_path):
+    flight = str(tmp_path / "flight.json")
+    c = Cluster(MGBAlg3Scheduler(1), workers=2, backend="sim",
+                trace=True, flight_path=flight)
+    c.submit(mk_job("j0", est=0.1))
+    c.drain()
+    doc = json.loads(open(c.flight.dumps[-1][1]).read())
+    assert doc["dropped"] == 0
+    assert doc["metrics"]["counters"][f"events.{ev.ADMIT}"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# JobHandle.explain + repro-top
+# ---------------------------------------------------------------------------
+
+def test_job_handle_explain_one_call():
+    c = Cluster(MGBAlg3Scheduler(1), workers=2, backend="sim", trace=True)
+    c.submit(mk_job("hog", mem_gb=14.0, est=5.0))
+    parked = c.submit(mk_job("parked", mem_gb=10.0, est=1.0))
+    c.run_until(1.0)
+    report = parked.explain()
+    (verdicts,) = report.values()
+    livemost = verdicts[-1]
+    assert livemost.action == obsx.REJECTED
+    assert livemost.data == {"live": True}     # probed under the lock NOW
+    assert any(r["reason"] == obsx.R_MEMORY_SHORT for r in livemost.reasons)
+    c.drain()
+    done = parked.explain()
+    (verdicts,) = done.values()
+    assert verdicts[-1].action == obsx.ADMITTED
+
+
+def test_top_renders_queue_devices_and_slo():
+    c = Cluster(PreemptiveAlg3Scheduler(2), workers=4, backend="sim",
+                shed_late=True, trace=True)
+    mon = SLOMonitor(window=8, clock=lambda: 0.0)
+    mon.note_deadline(False)
+    for i in range(4):
+        c.submit(mk_job(f"j{i}", mem_gb=12.0, est=3.0))
+    c.run_until(0.5)
+    frame = top.render(c.sched, slo=mon, stats=c.stats())
+    assert "queue" in frame and "dev 0" in frame and "dev 1" in frame
+    assert "slo" in frame and "jobs" in frame
+    assert "[#" in frame                      # an occupancy bar is drawn
+    c.drain()
+
+
+def test_top_pod_labels_on_sharded_fleet():
+    sched, tracer, ex, placed, cb = _sharded_fixture()
+    frame = top.render(sched)
+    assert "pod0/dev0" in frame and "pod1/dev3" in frame
+    assert "shards" in frame
