@@ -1,5 +1,7 @@
 """Benchmark runner: one experiment per paper table/figure, printed summary,
-JSON artifacts under benchmarks/results/.
+JSON artifacts under benchmarks/results/, plus a consolidated
+``BENCH_10.json`` of per-bench headline numbers so the perf trajectory is
+tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig5]
     PYTHONPATH=src python -m benchmarks.run --only executor,gang,preempt --smoke
@@ -7,14 +9,17 @@ JSON artifacts under benchmarks/results/.
 from __future__ import annotations
 
 import argparse
+import numbers
 import time
+from typing import Any, Dict
 
 from benchmarks import (
-    bench_executor, bench_gang, bench_obs, bench_preempt,
+    bench_executor, bench_gang, bench_obs, bench_preempt, bench_profile,
     bench_sched_scale, bench_serve, bench_whatif, fig4_alg2_vs_alg3,
     fig5_throughput, fig6_nn_schedgpu, kernels_bench, table2_crashes,
     table3_turnaround, table4_slowdown,
 )
+from benchmarks.common import save_json
 
 EXPERIMENTS = {
     "fig4": fig4_alg2_vs_alg3.run,
@@ -30,13 +35,47 @@ EXPERIMENTS = {
     "sched_scale": bench_sched_scale.run,
     "serve": bench_serve.run,
     "obs": bench_obs.run,
+    "profile": bench_profile.run,
     "whatif": bench_whatif.run,
 }
 
 # experiments whose run() takes smoke= (tiny inputs, assert-only, no JSON);
 # --smoke forwards to these and leaves the rest at full size
-SMOKE_CAPABLE = frozenset({"executor", "gang", "obs", "preempt",
+SMOKE_CAPABLE = frozenset({"executor", "gang", "obs", "preempt", "profile",
                            "sched_scale", "serve", "whatif"})
+
+
+def _headline(result: Any, depth: int = 0) -> Any:
+    """Distill an experiment's return value to its numeric scalars: dicts
+    keep number-valued entries (one level of nesting), lists of row-dicts
+    are keyed by their 'bench'/'config'/'name' labels. Anything else is
+    dropped — the trajectory file wants comparable numbers, not blobs."""
+    if isinstance(result, bool):
+        return None
+    if isinstance(result, numbers.Number):
+        return result
+    if isinstance(result, dict):
+        out = {}
+        for k, v in result.items():
+            h = _headline(v, depth + 1) if depth < 2 else (
+                v if isinstance(v, numbers.Number)
+                and not isinstance(v, bool) else None)
+            if h is not None and h != {}:
+                out[str(k)] = h
+        return out
+    if isinstance(result, (list, tuple)) and depth < 2:
+        out = {}
+        for i, row in enumerate(result):
+            if not isinstance(row, dict):
+                continue
+            label = "/".join(str(row[k]) for k in ("bench", "config", "name",
+                                                   "engine", "depth")
+                             if k in row) or str(i)
+            h = _headline(row, depth + 1)
+            if h:
+                out[label] = h
+        return out
+    return None
 
 
 def main() -> None:
@@ -58,15 +97,23 @@ def main() -> None:
     else:
         names = list(EXPERIMENTS)
     t0 = time.time()
+    summary: Dict[str, Any] = {"smoke": args.smoke,
+                               "experiments": {}}
     for name in names:
         print(f"\n=== {name} " + "=" * (70 - len(name)))
         if args.smoke and name in SMOKE_CAPABLE:
-            EXPERIMENTS[name](smoke=True)
+            result = EXPERIMENTS[name](smoke=True)
         else:
-            EXPERIMENTS[name]()
-    where = ("(smoke runs are assert-only: no new artifacts)" if args.smoke
-             else "artifacts in benchmarks/results/")
-    print(f"\nall benchmarks done in {time.time() - t0:.0f}s; {where}")
+            result = EXPERIMENTS[name]()
+        head = _headline(result)
+        if head:
+            summary["experiments"][name] = head
+    summary["elapsed_s"] = round(time.time() - t0, 1)
+    path = save_json("BENCH_10.json", summary)
+    where = ("(smoke runs are assert-only: no new per-bench artifacts)"
+             if args.smoke else "artifacts in benchmarks/results/")
+    print(f"\nall benchmarks done in {summary['elapsed_s']:.0f}s; {where}")
+    print(f"consolidated headline numbers -> {path}")
 
 
 if __name__ == "__main__":

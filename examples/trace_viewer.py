@@ -11,9 +11,12 @@ later revives. The whole lifecycle lands in ``cluster.trace``:
   * instant markers for the death/revive,
   * a flow arrow stitching the evicted task's device-0 → device-1 arc.
 
-The epilogue prints each job's decision verdicts (`handle.explain()`):
-why the batch jobs parked while urgent ones overtook them, which task
-the dead device evicted, and where everything finally landed.
+The cluster runs CALIBRATED (``calibrate=True``), so the export also
+carries the profiling counter tracks — per-device observed occupancy %
+and the fleet prediction-error % — and the epilogue prints each job's
+predicted-vs-observed attribution line (``handle.profile()``: runtime
+error, parked/dispatch decomposition, memory reserved vs high-water)
+alongside its decision verdicts (``handle.explain()``).
 
 Open the written JSON in chrome://tracing or https://ui.perfetto.dev.
 
@@ -23,6 +26,7 @@ from repro.core.cluster import Cluster
 from repro.core.scheduler import PreemptiveAlg3Scheduler
 from repro.core.task import Job, ResourceVector, Task, UnitTask
 from repro.obs.explain import format_verdicts
+from repro.obs.profile import format_profile
 from repro.obs.export import trace_summary
 from repro.obs.metrics import metrics_from_events
 from repro.obs.replay import validate_lifecycles
@@ -42,7 +46,7 @@ def mk_job(name, mem_gb, est, chips=1):
 
 def main():
     cluster = Cluster(PreemptiveAlg3Scheduler(2), workers=8, backend="sim",
-                      trace=True)
+                      trace=True, calibrate=True)
     handles = []
     # device 0 dies at t=0.5 (virtual): its resident is evicted, requeued,
     # and resumes on device 1 — the cross-device flow in the viewer
@@ -71,7 +75,8 @@ def main():
     s = trace_summary(doc)
     print(f"wrote {OUT}: {s['slices']} slices on devices {s['devices']}, "
           f"{s['flows']} flow(s) ({s['cross_device_flows']} cross-device), "
-          f"{s['counter_samples']} queue-depth samples")
+          f"{s['counter_samples']} counter samples (queue depth + "
+          f"occupancy % + est error %)")
 
     reg = metrics_from_events(cluster.trace.events())
     snap = reg.snapshot()
@@ -79,6 +84,13 @@ def main():
     print(f"queueing delay: n={qd['n']} p50={qd['p50']:.3f}s "
           f"p99={qd['p99']:.3f}s; "
           f"migrations={snap['counters'].get('migrations', 0)}")
+
+    # what each job actually did vs what its probe predicted — runtime
+    # error, the parked/dispatch decomposition, reserved vs high-water
+    print("\npredicted vs observed:")
+    for h in handles:
+        for p in h.profile().values():
+            print(f"  {format_profile(p)}")
 
     # why did each job wait / move / land where it did — the verdict
     # window every decision site recorded alongside the event stream

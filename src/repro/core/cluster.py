@@ -49,10 +49,12 @@ from repro.core.scheduler.preempt import PreemptionMixin
 from repro.core.simulator import Simulator, _JobState
 from repro.core.task import Job
 from repro.obs import explain as obsx
+from repro.obs.calibrate import CalibrationStore, attach_calibrator
 from repro.obs.events import Tracer, attach_tracer
 from repro.obs.explain import Explainer, attach_explainer
 from repro.obs.export import write_chrome_trace
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import Profiler, TaskProfile
 from repro.obs.replay import FlightRecorder
 
 
@@ -141,6 +143,13 @@ class JobHandle:
         ``trace=``)."""
         return self._cluster.explain(self)
 
+    def profile(self) -> Dict[str, TaskProfile]:
+        """Per-task observed-vs-predicted attribution: runtime error against
+        the probe estimate, memory reserved vs high-water, the parked /
+        dispatch / execution delay decomposition. Delegates to
+        ``Cluster.profile`` (needs the cluster built with ``trace=``)."""
+        return self._cluster.profile(self)
+
 
 class Cluster:
     """The open-arrival submission surface over a scheduler + backend."""
@@ -152,6 +161,7 @@ class Cluster:
                  shed_late: bool = False, preempt: Optional[bool] = None,
                  trace: Union[None, bool, Tracer] = None,
                  explain: Union[None, bool, Explainer] = None,
+                 calibrate: Union[None, bool, CalibrationStore] = None,
                  metrics: Optional[MetricsRegistry] = None,
                  flight_path: Optional[str] = None):
         self.sched = scheduler
@@ -222,6 +232,19 @@ class Cluster:
             self.explainer = explain if isinstance(explain, Explainer) \
                 else Explainer()
             attach_explainer(scheduler, self.explainer)
+        # online probe calibration (repro.obs.calibrate): calibrate=True
+        # builds a default CalibrationStore, or pass a tuned one. Admission
+        # then uses EWMA-corrected est_seconds and safety-margin memory;
+        # completions feed the store. A scheduler pre-wrapped in
+        # CalibratedScheduler is discovered instead of double-attached.
+        self.calibration: Optional[CalibrationStore] = None
+        if calibrate is not None and calibrate is not False:
+            self.calibration = calibrate \
+                if isinstance(calibrate, CalibrationStore) \
+                else CalibrationStore()
+            attach_calibrator(scheduler, self.calibration)
+        else:
+            self.calibration = getattr(scheduler, "_calib", None)
         self.handles: List[JobHandle] = []
         # scheduler counters are lifetime totals; snapshot them so a cluster
         # built over a reused scheduler reports only its own activity
@@ -436,19 +459,52 @@ class Cluster:
             out[task.name or str(task.uid)] = verdicts
         return out
 
-    def export_trace(self, path: str) -> Dict:
+    def profile(self, handle: Optional["JobHandle"] = None):
+        """Observed-vs-predicted attribution from the event stream (requires
+        ``trace=``). With a handle: per-task ``TaskProfile`` records for that
+        job, keyed by task name — runtime error vs the probe estimate,
+        memory reserved vs observed high-water, parked/dispatch/execution
+        delay decomposition, evictions. Without: the fleet summary —
+        aggregate error stats, per-device occupancy, and (when the cluster
+        is calibrated) the calibration store's accuracy report. Mirrors
+        ``explain()``/``JobHandle.explain()``."""
+        if self.trace is None:
+            raise RuntimeError("Cluster was built without trace= — pass "
+                               "trace=True (or a Tracer) to enable profiling")
+        prof = Profiler(self.trace, self.calibration)
+        if handle is None:
+            return prof.summary()
+        profs = prof.profiles()
+        out: Dict[str, TaskProfile] = {}
+        for task in handle.job.tasks:
+            p = profs.get(task.uid)
+            if p is None:          # never reached an emission site yet
+                p = TaskProfile(task.uid)
+                p.name = task.name
+            out[task.name or str(task.uid)] = p
+        return out
+
+    def export_trace(self, path: str, *,
+                     profile_counters: Optional[bool] = None) -> Dict:
         """Write the tracer's event window as a Chrome/Perfetto trace-event
         JSON (chrome://tracing or https://ui.perfetto.dev) and return the
         document. Requires the cluster to have been built with ``trace=``.
 
         On a sharded or multi-pod control plane the device tracks are
         named ``pod{p}/dev{d}`` (pod factoring derived from the
-        scheduler) instead of flat ``device {i}``."""
+        scheduler) instead of flat ``device {i}``.
+
+        ``profile_counters`` adds the profiling plane's counter tracks
+        (per-device occupancy %, fleet prediction-error %); default: on
+        exactly when the cluster is calibrated."""
         if self.trace is None:
             raise RuntimeError("Cluster was built without trace= — pass "
                                "trace=True (or a Tracer) to enable telemetry")
+        if profile_counters is None:
+            profile_counters = self.calibration is not None
         return write_chrome_trace(self.trace.events(), path,
-                                  devices_per_pod=self._devices_per_pod())
+                                  devices_per_pod=self._devices_per_pod(),
+                                  profile_counters=profile_counters)
 
     def _devices_per_pod(self) -> Optional[int]:
         """Pod factoring for trace-track / dashboard labels: a sharded

@@ -479,6 +479,9 @@ class Executor:
                 # attempt has exited — its tail must not be charged to
                 # this attempt's record
                 t_start = time.monotonic()
+                # stamped for the calibration store: task_end reads start_t
+                # to attribute wall-clock runtime against the probe estimate
+                task.start_t = t_start
                 jr.started = True
                 if tr is not None:
                     tr.emit(obs.BEGIN, task.uid, task.name, lead,

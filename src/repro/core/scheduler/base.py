@@ -62,7 +62,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.task import Task
+from repro.core.task import Task, observed_highwater
 from repro.obs import events as obs
 from repro.obs import explain as obsx
 
@@ -338,6 +338,10 @@ class WaiterQueueMixin:
         # None-guard contract as _trace — every verdict site costs one
         # attribute load when explanation is off
         self._explain: Optional[obsx.Explainer] = None
+        # online calibration store (obs.calibrate.attach_calibrator sets it):
+        # same None-guard contract again — admission applies corrected
+        # vectors and completions feed observations only when attached
+        self._calib = None
 
     @staticmethod
     def _class_key(task: Task) -> Any:
@@ -974,6 +978,13 @@ class Scheduler(WaiterQueueMixin):
         return self.device_feasible(task, self.devices[freed])
 
     def _admit_locked(self, task: Task) -> Optional[int]:
+        # calibration correction happens at the FIRST admission probe — before
+        # the grow branch, so decode-slot deltas are corrected too. apply() is
+        # idempotent (it stamps probe_vec), so re-probes of a parked waiter
+        # and sharded re-routing never double-correct.
+        calib = self._calib
+        if calib is not None and task.probe_vec is None:
+            calib.apply(task)
         if task.grow_hosts:
             return self._admit_grow_locked(task)
         self.begin_attempts += 1
@@ -991,9 +1002,14 @@ class Scheduler(WaiterQueueMixin):
         self.placements.append((task.uid, dev.index))
         tr = self._trace
         if tr is not None:
+            # reservation payload only on calibrated runs: the profiler reads
+            # it as "what admission actually granted"; uncalibrated traces
+            # keep the zero-payload emission (bench_obs baseline unchanged)
             tr.emit(obs.ADMIT, task.uid, task.name,
                     dev.index + self._trace_dev_off,
-                    self._epochs.get(task.uid, 0))
+                    self._epochs.get(task.uid, 0),
+                    data={"hbm": task.resources.hbm_bytes}
+                    if calib is not None else None)
         ex = self._explain
         if ex is not None:
             ex.record(task.uid, task.name, obsx.ADMITTED,
@@ -1172,15 +1188,22 @@ class Scheduler(WaiterQueueMixin):
             if freed is not None:
                 self.devices[freed].release(task)
             self._admit_cbs.pop(task.uid, None)
+            calib = self._calib
+            if calib is not None and freed is not None:
+                calib.note_end(task, self._clock())
             tr = self._trace
             if tr is not None and freed is not None:
                 # freed None = a stale end for an already-evicted run (the
                 # eviction cleared task.device): nothing was released, so
-                # nothing is emitted — the fresh incarnation owns the task
+                # nothing is emitted — the fresh incarnation owns the task.
+                # On calibrated runs the END carries the observed memory
+                # high-water, closing the reserved-vs-observed join.
                 tr.emit(obs.SHRINK if task.grow_hosts else obs.END,
                         task.uid, task.name,
                         freed + self._trace_dev_off,
-                        self._epochs.get(task.uid, 0))
+                        self._epochs.get(task.uid, 0),
+                        data={"hw": observed_highwater(task)}
+                        if calib is not None else None)
             fired = self._drain_locked(freed=freed)
         self._fire(fired)
         return True

@@ -42,7 +42,7 @@ from repro.core import interference
 from repro.core.scheduler.base import (
     DEFAULT_HBM, SLOTS, DeviceState, WaiterQueueMixin, slots_needed,
 )
-from repro.core.task import Task
+from repro.core.task import Task, observed_highwater
 from repro.core.topology import (
     DCN_BW, ICI_BW, Cell, GangReservation, Topology,
 )
@@ -207,6 +207,11 @@ class GangScheduler(WaiterQueueMixin):
 
     # -- admission / release --------------------------------------------------
     def _admit_locked(self, task: Task) -> Optional[GangReservation]:
+        # calibration correction at the first admission probe (idempotent —
+        # apply() stamps probe_vec), mirroring Scheduler._admit_locked
+        calib = self._calib
+        if calib is not None and task.probe_vec is None:
+            calib.apply(task)
         self.begin_attempts += 1
         group = self._find_group(task)
         if group is None:
@@ -341,6 +346,9 @@ class GangScheduler(WaiterQueueMixin):
                 return False
             group = self._release_locked(task)
             self._admit_cbs.pop(task.uid, None)
+            calib = self._calib
+            if calib is not None and group is not None:
+                calib.note_end(task, self._clock())
             tr = self._trace
             if tr is not None and group is not None:
                 off = self._trace_dev_off
@@ -349,7 +357,9 @@ class GangScheduler(WaiterQueueMixin):
                     tr.emit(obs.GANG_RELEASE, task.uid, task.name,
                             group.lead + off, epoch)
                 tr.emit(obs.END, task.uid, task.name,
-                        group.lead + off, epoch)
+                        group.lead + off, epoch,
+                        data={"hw": observed_highwater(task)}
+                        if calib is not None else None)
             freed = tuple(group.cells()) if group is not None else None
             fired = self._drain_locked(freed=freed)
         self._fire(fired)

@@ -41,7 +41,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core import interference
 from repro.core.executor import NEVER_STARTED, ExecRecord
 from repro.core.scheduler.base import DEADLINE_SHED, Scheduler
-from repro.core.task import Job, Task
+from repro.core.task import Job, Task, true_work_seconds
 from repro.core.topology import placement_devices
 from repro.obs import events as obs
 
@@ -523,7 +523,11 @@ class Simulator:
             if tr is not None:
                 tr.emit(obs.BEGIN, task.uid, task.name, devs[0], epoch)
             self._started_at[task.uid] = self.now
-            work = task.resources.est_seconds
+            # the simulated PHYSICS run ground-truth work (true_vec when a
+            # drift workload supplies one, else the original probe estimate)
+            # — never the calibration-corrected prediction, which must only
+            # change what admission RESERVES, not what the task DOES
+            work = true_work_seconds(task)
             ledger = getattr(self.sched, "ledger", None)
             if ledger is not None:
                 banked = ledger.remaining_or_none(task.uid)

@@ -112,6 +112,23 @@ class Task:
     arrival_t: float = 0.0
     start_t: float = -1.0
     finish_t: float = -1.0
+    # -- observed-vs-predicted calibration (obs.calibrate) -------------------
+    # probe_vec: the probe's ORIGINAL prediction, stamped by the calibration
+    # layer at the task's first admission probe, BEFORE any correction — it
+    # is both the ground truth for prediction-error accounting and the
+    # calibration store's class key (corrected vectors must not mint new
+    # waiter classes or feed back into their own statistics).
+    probe_vec: Optional[ResourceVector] = None
+    # calibrated_vec: the corrected vector admission actually uses when a
+    # CalibrationStore is attached (EWMA-scaled est_seconds, safety-margin
+    # memory). When set, `resources` returns it — every reservation,
+    # release, and feasibility check then sees the same corrected footprint.
+    calibrated_vec: Optional[ResourceVector] = None
+    # true_vec: ground truth for studies — the simulator runs the task for
+    # true_vec.est_seconds (not the possibly-stale probe estimate) and the
+    # profiler reads true_vec.hbm_bytes as the observed memory high-water.
+    # None outside synthetic drift workloads (live tasks ARE ground truth).
+    true_vec: Optional[ResourceVector] = None
 
     @property
     def memobjs(self) -> FrozenSet[str]:
@@ -123,7 +140,11 @@ class Task:
     @property
     def resources(self) -> ResourceVector:
         """Aggregate vector: memory is the UNION footprint (buffers shared),
-        work is the sum; core_demand is the duration-weighted mean."""
+        work is the sum; core_demand is the duration-weighted mean. A
+        calibration-corrected vector (``calibrated_vec``) takes precedence —
+        admission, release, and feasibility all see the same correction."""
+        if self.calibrated_vec is not None:
+            return self.calibrated_vec
         if len(self.units) == 1:
             return self.units[0].resources
         rs = [u.resources for u in self.units]
@@ -195,3 +216,33 @@ class Job:
     @property
     def peak_hbm(self) -> int:
         return max((t.resources.hbm_bytes for t in self.tasks), default=0)
+
+
+def true_work_seconds(task: Task) -> float:
+    """Ground-truth solo work for ``task`` — what the simulator should RUN,
+    as opposed to what admission PREDICTS. Precedence: an explicit
+    ``true_vec`` (synthetic drift workloads), then the stamped original
+    probe estimate, then the current vector. Keeping this separate from
+    ``task.resources.est_seconds`` is what lets calibration correct the
+    prediction without changing the simulated physics."""
+    tv = task.true_vec
+    if tv is not None:
+        return tv.est_seconds
+    pv = task.probe_vec
+    if pv is not None:
+        return pv.est_seconds
+    return task.resources.est_seconds
+
+
+def observed_highwater(task: Task) -> int:
+    """Observed peak device memory for ``task``: the ground-truth vector's
+    footprint when one exists, else the original probe's (a probe-exact
+    prediction — the compiled artifact's actual buffer plan — IS the
+    observation for live runs)."""
+    tv = task.true_vec
+    if tv is not None:
+        return tv.hbm_bytes
+    pv = task.probe_vec
+    if pv is not None:
+        return pv.hbm_bytes
+    return task.resources.hbm_bytes

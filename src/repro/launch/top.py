@@ -8,11 +8,15 @@ while a fleet runs:
     skips, the gang at the queue front, per-shard balance and steal
     count on a sharded control plane;
   * one row per device — ``pod{p}/dev{d}`` label on sharded/multi-pod
-    fleets, HBM occupancy bar, used/total GB, compute slots, resident
-    count, DEAD marker;
-  * the SLO strip — per-stream burn rates with a healthy/VIOLATING flag
-    and the worst observed-vs-roofline slowdown against the paper's
-    2.5% envelope.
+    fleets, an occupancy bar (OBSERVED occupancy % from the profiler's
+    residency timeline on traced fleets, HBM fraction otherwise),
+    used/total GB, compute slots, resident count, DEAD marker;
+  * per-class prediction-accuracy rows when a calibration store is
+    attached — raw vs corrected runtime error, learned EWMA ratio,
+    observed memory high-water;
+  * the SLO strip — per-stream burn rates (incl. the probe-drift
+    stream) with a healthy/VIOLATING flag and the worst
+    observed-vs-roofline slowdown against the paper's 2.5% envelope.
 
 ``Top`` wraps the renderer in a refresh loop for a live terminal;
 ``python -m repro.launch.top --demo`` drives a small simulated workload
@@ -66,25 +70,57 @@ def _queue_lines(stats: Dict[str, Any]) -> List[str]:
     return lines
 
 
-def _device_lines(sched: Any, width: int = 20) -> List[str]:
+def _device_lines(sched: Any, width: int = 20,
+                  occupancy: Optional[Dict[int, Dict[str, Any]]] = None
+                  ) -> List[str]:
+    """One row per device. The bar shows OBSERVED occupancy % (the
+    profiler's demand-weighted residency timeline) when a traced window
+    supplies one — what the chip is doing, not just what admission
+    reserved; HBM stays the numeric used/total readout. Untraced fleets
+    keep the historical HBM-fraction bar."""
     dpp = _devices_per_pod(sched)
     lines = []
     for i, d in enumerate(sched.devices):
         label = f"pod{i // dpp}/dev{i % dpp}" if dpp else f"dev {i}"
         used = d.used_hbm / _GB
         total = d.total_hbm / _GB
-        frac = d.used_hbm / d.total_hbm if d.total_hbm else 0.0
+        occ = occupancy.get(i) if occupancy else None
+        if occ is not None:
+            frac = occ["last"]
+            pct = f" occ {frac * 100:3.0f}%"
+        else:
+            frac = d.used_hbm / d.total_hbm if d.total_hbm else 0.0
+            pct = ""
         dead = "  DEAD" if not d.alive else ""
         lines.append(
-            f"{label:<12}{_bar(frac, width)} {used:5.1f}/{total:4.1f}GB "
+            f"{label:<12}{_bar(frac, width)}{pct} {used:5.1f}/{total:4.1f}GB "
             f"slots {d.used_slots:2d}/{SLOTS} residents "
             f"{len(d.residents)}{dead}")
     return lines
 
 
+def _calib_lines(store: Any, limit: int = 4) -> List[str]:
+    """Per-class prediction-accuracy rows from an attached
+    ``CalibrationStore``: raw vs corrected mean absolute runtime error,
+    the learned EWMA ratio, observed memory high-water."""
+    rows = store.rows(limit=limit)
+    if not rows:
+        return []
+    lines = [f"calib   classes={len(rows)} shown, "
+             f"corrections={store.corrections} "
+             f"violations={store.violations}"]
+    for r in rows:
+        ratio = f"{r['ratio']:.2f}" if r["n"] else "  - "
+        lines.append(
+            f"        est {r['est_s']:6.3f}s x{ratio} n={r['n']:<4d} "
+            f"mae raw {r['mae_raw_s']:.3f}s -> used {r['mae_used_s']:.3f}s "
+            f"hw {r['hw_gb']:.1f}/{r['hbm_gb']:.1f}GB")
+    return lines
+
+
 def _slo_lines(status: Dict[str, Any]) -> List[str]:
     parts = []
-    for stream in ("deadline", "ttft", "tpot", "slowdown"):
+    for stream in ("deadline", "ttft", "tpot", "slowdown", "drift"):
         s = status.get(stream)
         if not s or not s["n"]:
             continue
@@ -102,10 +138,21 @@ def render(sched: Any, *, slo: Optional[Any] = None,
            stats: Optional[Dict[str, Any]] = None,
            title: str = "repro-top", bar_width: int = 20) -> str:
     """One dashboard frame as a string. ``stats`` lets a caller pass
-    ``Cluster.stats()`` for the footer; ``slo`` is an ``SLOMonitor``."""
+    ``Cluster.stats()`` for the footer; ``slo`` is an ``SLOMonitor``.
+    On a traced scheduler the device bars switch to observed occupancy %
+    (profiler residency timeline); an attached calibration store adds
+    per-class prediction-accuracy rows."""
+    occupancy = None
+    tracer = getattr(sched, "_trace", None)
+    if tracer is not None:
+        from repro.obs.profile import device_occupancy
+        occupancy = device_occupancy(tracer.events())
     lines = [title, "=" * max(len(title), 8)]
     lines += _queue_lines(sched.queue_stats())
-    lines += _device_lines(sched, bar_width)
+    lines += _device_lines(sched, bar_width, occupancy)
+    store = getattr(sched, "_calib", None)
+    if store is not None:
+        lines += _calib_lines(store)
     if slo is not None:
         lines += _slo_lines(slo.status())
     if stats:
@@ -155,9 +202,10 @@ def _demo() -> str:
     from repro.core.workloads import overload_mix
     from repro.obs.slo import SLOMonitor
 
-    slo = SLOMonitor(window=32)
     c = Cluster(PreemptiveAlg3Scheduler(4), workers=8, backend="sim",
-                shed_late=True, trace=True)
+                shed_late=True, trace=True, calibrate=True)
+    # drift stream fed straight from the calibration store's observations
+    slo = SLOMonitor.for_calibration(c.calibration, window=32)
     rows = overload_mix(11, n_urgent=8)
     for row in rows:
         c.run_until(row["t"])

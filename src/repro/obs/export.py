@@ -46,8 +46,15 @@ def device_track_name(d: int, devices_per_pod: Optional[int] = None) -> str:
 
 
 def to_chrome_trace(events: Sequence[ev.Event], *,
-                    devices_per_pod: Optional[int] = None) -> dict:
-    """Fold an event window into a Chrome trace-event document (dict)."""
+                    devices_per_pod: Optional[int] = None,
+                    profile_counters: bool = False) -> dict:
+    """Fold an event window into a Chrome trace-event document (dict).
+
+    ``profile_counters`` merges the profiling plane's counter tracks
+    (per-device "occupancy %" on each device row, and a fleet-wide
+    "prediction error %" row) built by ``obs.profile`` from the same
+    window — off by default so uncalibrated exports are byte-identical
+    to the historical format."""
     if not events:
         return {"traceEvents": [], "displayTimeUnit": "ms"}
     t0 = min(e.t for e in events)
@@ -125,6 +132,11 @@ def to_chrome_trace(events: Sequence[ev.Event], *,
         out.append({"ph": "C", "pid": _QUEUE_PID, "name": "waiters",
                     "ts": ts, "args": {"depth": depth}})
 
+    # -- profiling-plane counters (lazy import: profile builds ON export) ---
+    if profile_counters:
+        from repro.obs.profile import chrome_counter_records
+        out.extend(chrome_counter_records(events, us))
+
     return {"traceEvents": out, "displayTimeUnit": "ms"}
 
 
@@ -139,10 +151,12 @@ def _close(open_slice: dict, closed: dict, uid: int, t: float,
 
 
 def write_chrome_trace(events: Sequence[ev.Event], path: str, *,
-                       devices_per_pod: Optional[int] = None) -> dict:
+                       devices_per_pod: Optional[int] = None,
+                       profile_counters: bool = False) -> dict:
     """Export ``events`` to a Perfetto-loadable JSON file; returns the
     document so callers can validate/summarize without re-reading it."""
-    doc = to_chrome_trace(events, devices_per_pod=devices_per_pod)
+    doc = to_chrome_trace(events, devices_per_pod=devices_per_pod,
+                          profile_counters=profile_counters)
     with open(path, "w") as f:
         json.dump(doc, f)
     return doc

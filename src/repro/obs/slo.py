@@ -40,8 +40,8 @@ SLOWDOWN_ENVELOPE = 0.025
 class SLOAlert(NamedTuple):
     """One healthy->violating transition."""
     t: float
-    stream: str        # "deadline" | "ttft" | "tpot" | "slowdown"
-    name: str          # task name for slowdown alerts, else ""
+    stream: str        # "deadline" | "ttft" | "tpot" | "slowdown" | "drift"
+    name: str          # task name for slowdown/drift alerts, else ""
     value: float       # the burn rate (or slowdown factor) at transition
     threshold: float   # what it crossed
 
@@ -89,6 +89,8 @@ class SLOMonitor:
                  tpot_slo_s: Optional[float] = None,
                  latency_target: float = 0.99,
                  slowdown_envelope: float = SLOWDOWN_ENVELOPE,
+                 drift_tolerance: float = 0.25,
+                 drift_target: float = 0.9,
                  on_alert: Optional[Callable[[SLOAlert], None]] = None,
                  clock: Optional[Callable[[], float]] = None):
         if window < 1:
@@ -97,6 +99,12 @@ class SLOMonitor:
         self.ttft_slo_s = ttft_slo_s
         self.tpot_slo_s = tpot_slo_s
         self.slowdown_envelope = slowdown_envelope
+        # probe-drift stream (fed by obs.calibrate via for_calibration): a
+        # completion whose observed/predicted runtime ratio strays more than
+        # drift_tolerance from 1 is a drift violation; the stream burning
+        # past its (looser) drift_target budget means the workload has
+        # drifted away from what the probes predict
+        self.drift_tolerance = drift_tolerance
         self.on_alert = on_alert
         self._clock = clock or time.monotonic
         self._wins: Dict[str, _Window] = {
@@ -104,6 +112,7 @@ class SLOMonitor:
             "ttft": _Window(window, latency_target),
             "tpot": _Window(window, latency_target),
             "slowdown": _Window(window, latency_target),
+            "drift": _Window(window, drift_target),
         }
         self._violating: Dict[str, bool] = {k: False for k in self._wins}
         # per-task latest slowdown factor (observed / roofline)
@@ -153,6 +162,19 @@ class SLOMonitor:
         limit = 1.0 + self.slowdown_envelope
         self._push("slowdown", factor > limit, factor, limit, name)
 
+    def note_drift(self, name: str, predicted_s: float,
+                   observed_s: float) -> None:
+        """One completion's predicted-vs-observed runtime: a ratio straying
+        more than ``drift_tolerance`` from 1 (either direction) counts as
+        probe drift. Edge-triggered like every stream — the alert fires
+        once when the window starts burning, i.e. when mispredictions
+        become the norm rather than noise."""
+        if predicted_s <= 0:
+            return
+        ratio = observed_s / predicted_s
+        self._push("drift", abs(ratio - 1.0) > self.drift_tolerance,
+                   ratio, self.drift_tolerance, name)
+
     # -- registry subscription ----------------------------------------------
     @classmethod
     def for_serving(cls, registry: Any, **kw) -> "SLOMonitor":
@@ -163,6 +185,23 @@ class SLOMonitor:
         mon = cls(**kw)
         registry.on_record("ttft_s", mon.note_ttft)
         registry.on_record("tpot_s", mon.note_tpot)
+        return mon
+
+    @classmethod
+    def for_calibration(cls, store: Any, **kw) -> "SLOMonitor":
+        """Build a monitor whose drift stream is fed by a
+        ``CalibrationStore``: every completion observation the store
+        records (via its ``on_observe`` hook) compares the ORIGINAL probe
+        estimate against the observed runtime — corrected estimates are
+        deliberately not used, so the alert tracks raw probe quality even
+        while calibration is hiding the error from admission."""
+        mon = cls(**kw)
+
+        def feed(o: Any) -> None:
+            if o.observed_s is not None:
+                mon.note_drift(o.name, o.predicted_s, o.observed_s)
+
+        store.on_observe(feed)
         return mon
 
     # -- reading -------------------------------------------------------------
@@ -221,7 +260,7 @@ def prometheus_text(registry: Any,
         lines.append(f"{m}_count {h['n']}")
     if monitor is not None:
         st = monitor.status()
-        for stream in ("deadline", "ttft", "tpot", "slowdown"):
+        for stream in ("deadline", "ttft", "tpot", "slowdown", "drift"):
             s = st[stream]
             m = _metric_name(f"slo_{stream}_burn", prefix)
             lines.append(f"# TYPE {m} gauge")

@@ -275,6 +275,9 @@ class _Loop:
     rows: List[Optional[ServeRequest]]
     state: Any
     pending: List[ServeRequest] = dataclasses.field(default_factory=list)
+    # backend timestamp of this loop's previous decode step; -1 while the
+    # loop is idle, so per-step TPOT attribution never charges idle gaps
+    last_step_t: float = -1.0
 
     @property
     def n_active(self) -> int:
@@ -456,13 +459,29 @@ class ServeEngine:
         emitted."""
         emitted = 0
         retired: List[ServeRequest] = []
+        # per-decode-step TPOT attribution: observed inter-step gap vs the
+        # model's predicted step_seconds, fed to an attached calibration
+        # store (one attribute read when profiling is off). Deliberately
+        # NOT fed to the SLO drift stream — the live busy-loop pumps
+        # faster than the step cadence, which is pacing, not drift.
+        store = getattr(self.sched, "_calib", None)
+        pred_step = self.model.step_seconds
         with self._lock:
             for loop in self.loops.values():
                 self._adopt_pending_locked(loop)
                 if loop.n_active == 0:
+                    loop.last_step_t = -1.0
                     continue
                 self.model.step(loop.state, loop.rows)
                 now = self.cluster.now
+                if loop.last_step_t >= 0:
+                    obs_step = now - loop.last_step_t
+                    if store is not None:
+                        store.note_step(loop.device, pred_step, obs_step)
+                    if self.metrics_registry is not None:
+                        self.metrics_registry.hist("decode_step_s").record(
+                            obs_step)
+                loop.last_step_t = now
                 for row, req in enumerate(loop.rows):
                     if req is None:
                         continue
@@ -564,9 +583,13 @@ class ServeEngine:
             i = min(int(p * (len(xs) - 1) + 0.5), len(xs) - 1)
             return xs[i]
 
+        store = getattr(self.sched, "_calib", None)
+        step_attr = store.accuracy_report()["serve_steps"] \
+            if store is not None else {}
         return {
             "requests": len(reqs),
             "done": len(done),
+            "step_attribution": step_attr,
             "shed": sum(1 for r in reqs
                         if r.status is RequestStatus.SHED),
             "failed": sum(1 for r in reqs

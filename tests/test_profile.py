@@ -1,0 +1,491 @@
+"""Profiling & calibration plane (ISSUE 10 tentpole): observed-vs-
+predicted attribution joined from the event stream, plus the online
+probe-calibration feedback loop.
+
+  * the memory-safety INVARIANT: a corrected reservation never shrinks
+    below the class's observed high-water — in both allow_shrink modes,
+    checked directly on ``CalibrationStore.corrected_for``;
+  * EWMA runtime correction converges on a synthetic drifting trace, and
+    calibrated admission cuts the mean absolute ``est_seconds`` error
+    >= 2x on ``workloads.drifting_mix`` with zero memory violations;
+  * the event-stream join decomposes queueing delay into parked /
+    dispatch / execution on hand-built and simulated lifecycles;
+  * sim and live backends produce the SAME attribution structure for the
+    same submission trace (diffed through ``obs.replay``);
+  * ``Cluster.profile()`` / ``JobHandle.profile()`` accessors, Perfetto
+    profile-counter tracks, the SLO drift stream, and the dashboard's
+    occupancy bars + calibration rows.
+"""
+import dataclasses
+
+from repro.core.cluster import Cluster
+from repro.core.scheduler import MGBAlg3Scheduler
+from repro.core.task import (
+    Job, ResourceVector, Task, UnitTask, observed_highwater,
+    true_work_seconds,
+)
+from repro.core.workloads import drifting_mix
+from repro.launch import top
+from repro.obs import events as ev
+from repro.obs.calibrate import (
+    CalibratedScheduler, CalibrationStore, attach_calibrator,
+)
+from repro.obs.events import Event, Tracer
+from repro.obs.export import to_chrome_trace, trace_summary, \
+    validate_chrome_trace
+from repro.obs.profile import (
+    Profiler, device_occupancy, format_profile, profiles_from_events,
+)
+from repro.obs.replay import diff_streams, validate_lifecycles
+from repro.obs.slo import SLOMonitor
+
+GB = 1024**3
+
+
+def mk_vec(mem_gb=2.0, est=1.0, demand=0.5):
+    return ResourceVector(hbm_bytes=int(mem_gb * GB), flops=1e9,
+                          bytes_accessed=1e9, est_seconds=est,
+                          core_demand=demand, bw_demand=demand)
+
+
+def mk_task(name, mem_gb=2.0, est=1.0, demand=0.5, vec=None):
+    v = vec if vec is not None else mk_vec(mem_gb, est, demand)
+    return Task(units=[UnitTask(fn=None, memobjs=frozenset({name}),
+                                resources=v, name=name)], name=name)
+
+
+def mk_job(name, mem_gb=2.0, est=1.0, demand=0.5):
+    return Job(tasks=[mk_task(name, mem_gb, est, demand)], name=name)
+
+
+def feed_end(store, vec, *, observed_s, hw_gb, calibrate=False, t0=0.0):
+    """Run one synthetic task through the store's admission + completion
+    hooks: apply() stamps probe_vec (and any correction), note_end folds
+    the observation with the given true runtime/high-water."""
+    t = mk_task("synth", vec=vec)
+    if calibrate:
+        store.apply(t)
+    else:
+        t.probe_vec = vec              # stamp without installing corrections
+    t.true_vec = dataclasses.replace(vec, hbm_bytes=int(hw_gb * GB))
+    t.start_t = t0
+    store.note_end(t, t0 + observed_s)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# the memory invariant: corrected reservations never shrink below high-water
+# ---------------------------------------------------------------------------
+
+def test_corrected_memory_never_below_highwater_inflate_mode():
+    """Default mode: corrected hbm >= max(probe, hw x (1+margin)) — never
+    below the probe's own figure, never below observed high-water."""
+    store = CalibrationStore(mem_margin=0.10)
+    vec = mk_vec(mem_gb=4.0, est=1.0)
+    # under-reservation observed: tasks actually touch 5 GB
+    for _ in range(5):
+        feed_end(store, vec, observed_s=1.0, hw_gb=5.0)
+    corrected = store.corrected_for(vec)
+    assert corrected is not None
+    hw = store.highwater(vec)
+    assert hw == 5 * GB
+    assert corrected.hbm_bytes >= hw                  # THE invariant
+    assert corrected.hbm_bytes >= vec.hbm_bytes       # inflate-only mode
+    assert corrected.hbm_bytes == int(5 * GB * 1.10)
+
+
+def test_corrected_memory_shrink_mode_floors_at_highwater():
+    """allow_shrink=True may cut an over-reservation, but the floor stays
+    the observed high-water even with mem_margin=0."""
+    store = CalibrationStore(mem_margin=0.0, allow_shrink=True,
+                             min_samples=3)
+    vec = mk_vec(mem_gb=8.0, est=1.0)
+    # over-reservation: the probe says 8 GB, tasks only touch 3 GB
+    for _ in range(4):
+        feed_end(store, vec, observed_s=1.0, hw_gb=3.0)
+    corrected = store.corrected_for(vec)
+    assert corrected is not None
+    assert corrected.hbm_bytes < vec.hbm_bytes        # shrink happened
+    assert corrected.hbm_bytes >= store.highwater(vec)  # but never below hw
+    assert corrected.hbm_bytes == 3 * GB
+
+
+def test_shrink_waits_for_min_samples():
+    """One observation must not shrink a reservation — shrinking needs
+    min_samples history (inflating is always safe and starts immediately)."""
+    store = CalibrationStore(mem_margin=0.0, allow_shrink=True,
+                             min_samples=3)
+    vec = mk_vec(mem_gb=8.0, est=1.0)
+    feed_end(store, vec, observed_s=1.0, hw_gb=3.0)
+    corrected = store.corrected_for(vec)
+    # below min_samples the memory fold is inflate-only: 3 GB < 8 GB probe
+    # means no memory change, and one runtime sample means no est change
+    assert corrected is None or corrected.hbm_bytes >= vec.hbm_bytes
+
+
+def test_highwater_invariant_fuzz():
+    """Whatever mix of margins/modes/observations: corrected hbm is never
+    below the class's observed hw_max."""
+    for margin in (0.0, 0.05, 0.5):
+        for shrink in (False, True):
+            store = CalibrationStore(mem_margin=margin, allow_shrink=shrink,
+                                     min_samples=1)
+            vec = mk_vec(mem_gb=4.0, est=0.5)
+            for hw_gb in (1.0, 6.0, 2.0, 5.5, 3.0):
+                feed_end(store, vec, observed_s=1.0, hw_gb=hw_gb)
+                corrected = store.corrected_for(vec)
+                if corrected is not None:
+                    assert corrected.hbm_bytes >= store.highwater(vec), (
+                        margin, shrink, hw_gb)
+
+
+# ---------------------------------------------------------------------------
+# EWMA runtime correction
+# ---------------------------------------------------------------------------
+
+def test_ewma_converges_on_drifted_runtime():
+    """Probes say 1 s, reality says 2 s: the class ratio converges to ~2
+    and corrected estimates follow."""
+    store = CalibrationStore(alpha=0.5, min_samples=3)
+    vec = mk_vec(mem_gb=2.0, est=1.0)
+    for _ in range(12):
+        feed_end(store, vec, observed_s=2.0, hw_gb=1.0)
+    ratio = store.ratio_ewma(vec)
+    assert ratio is not None and abs(ratio - 2.0) < 1e-6
+    corrected = store.corrected_for(vec)
+    assert corrected is not None
+    assert abs(corrected.est_seconds - 2.0) < 1e-6
+
+
+def test_apply_is_idempotent_and_keys_by_probe_vec():
+    """A corrected vector must never mint a new class or feed its own
+    statistics: apply() stamps the ORIGINAL probe vector as the key, and a
+    second apply is a no-op. fold_batch=1 folds each completion eagerly —
+    the default defers folding to batches/reads (the hot-path budget)."""
+    store = CalibrationStore(min_samples=1, alpha=1.0, fold_batch=1)
+    vec = mk_vec(mem_gb=2.0, est=1.0)
+    for _ in range(3):
+        feed_end(store, vec, observed_s=3.0, hw_gb=1.0)
+    t = mk_task("t", vec=vec)
+    store.apply(t)
+    assert t.probe_vec is vec
+    assert t.calibrated_vec is not None
+    assert t.resources.est_seconds != vec.est_seconds
+    first = t.calibrated_vec
+    store.apply(t)                       # idempotent: guard on probe_vec
+    assert t.calibrated_vec is first
+    # a completion of the calibrated task folds into the ORIGINAL class
+    t.true_vec = dataclasses.replace(vec, hbm_bytes=1 * GB)
+    t.start_t = 0.0
+    store.note_end(t, 3.0)
+    assert store.accuracy_report()["classes"] == 1
+
+
+def test_observation_feed_reaches_subscribers():
+    store = CalibrationStore()
+    seen = []
+    store.on_observe(seen.append)
+    feed_end(store, mk_vec(est=1.0), observed_s=2.0, hw_gb=1.0)
+    (o,) = seen
+    assert o.predicted_s == 1.0 and abs(o.observed_s - 2.0) < 1e-9
+    assert o.hw_bytes == 1 * GB
+
+
+# ---------------------------------------------------------------------------
+# the acceptance gate: calibrated admission on a drifting trace
+# ---------------------------------------------------------------------------
+
+def test_calibrated_sim_halves_est_error_with_zero_violations():
+    """The ISSUE-10 acceptance criterion, at test scale: one calibrated
+    sim pass over the drifting mix cuts mean absolute est_seconds error
+    >= 2x (paired: the same completions scored raw vs corrected) and the
+    memory invariant holds — zero violations, store-side AND profiler-
+    side."""
+    store = CalibrationStore()
+    c = Cluster(MGBAlg3Scheduler(8), backend="sim", trace=True,
+                calibrate=store)
+    for row in drifting_mix(0, n_jobs=120):
+        c.run_until(row["t"])
+        c.submit(row["job"])
+    c.drain()
+    rep = store.accuracy_report()
+    assert rep["violations"] == 0
+    assert rep["corrections"] > 0
+    paired = rep["paired"]
+    assert paired["n"] > 0
+    assert paired["improvement"] >= 2.0, rep
+    summary = c.profile()
+    assert summary["memory_violations"] == 0
+    assert summary["completed"] == summary["tasks"] == 120
+    assert summary["calibration"]["corrections"] == rep["corrections"]
+    # the lifecycle stream itself stays legal with calibration attached
+    assert validate_lifecycles(c.trace.events(), require_terminal=True) == []
+
+
+def test_true_vec_drives_sim_physics_not_admission():
+    """A task whose true_vec says 2 s but probe says 1 s RUNS for 2 s of
+    virtual time while admission reserved by the probe."""
+    vec = mk_vec(mem_gb=2.0, est=1.0)
+    t = mk_task("drifty", vec=vec)
+    t.true_vec = dataclasses.replace(vec, est_seconds=2.0,
+                                     hbm_bytes=1 * GB)
+    assert true_work_seconds(t) == 2.0
+    assert observed_highwater(t) == 1 * GB
+    assert t.resources is vec            # admission still sees the probe
+    c = Cluster(MGBAlg3Scheduler(1), backend="sim", trace=True)
+    h = c.submit(Job(tasks=[t], name="drifty"))
+    c.drain()
+    (p,) = h.profile().values()
+    assert p.completed and abs(p.exec_s - 2.0) < 1e-6
+    assert p.pred_est_s == 1.0
+
+
+# ---------------------------------------------------------------------------
+# the event-stream join
+# ---------------------------------------------------------------------------
+
+def _evt(seq, t, kind, uid=1, name="t", device=0, data=None):
+    return Event(seq, t, kind, uid, name, device, 0, data)
+
+
+def test_profile_join_decomposes_delays():
+    """Hand-built lifecycle: submit 0.0, park until 1.0, begin 1.25,
+    end 3.25 — park/dispatch/exec land in the right buckets."""
+    events = [
+        _evt(0, 0.0, ev.SUBMIT, data={"job": "j", "est_seconds": 2.5,
+                                      "hbm_bytes": 4 * GB,
+                                      "core_demand": 0.5, "bw_demand": 0.25}),
+        _evt(1, 0.0, ev.PARK),
+        _evt(2, 1.0, ev.ADMIT),
+        _evt(3, 1.25, ev.BEGIN),
+        _evt(4, 3.25, ev.END, data={"hw": 3 * GB}),
+    ]
+    (p,) = profiles_from_events(events).values()
+    assert p.park_s == 1.0
+    assert p.dispatch_s == 0.25
+    assert p.exec_s == 2.0
+    assert p.queueing_s == 1.25
+    assert p.completed and not p.memory_violation
+    assert p.pred_est_s == 2.5 and p.hw_bytes == 3 * GB
+    assert p.reserved_hbm == 4 * GB      # falls back to the SUBMIT payload
+    assert abs(p.err_s - (-0.5)) < 1e-9
+    assert p.demand == 0.5
+    line = format_profile(p)
+    assert "predicted 2.500s -> observed 2.000s" in line
+    assert "parked 1.000s" in line and "dispatch 0.250s" in line
+
+
+def test_profile_join_eviction_accumulates_partial_exec():
+    events = [
+        _evt(0, 0.0, ev.SUBMIT, data={"job": "j", "est_seconds": 2.0,
+                                      "hbm_bytes": GB}),
+        _evt(1, 0.0, ev.ADMIT),
+        _evt(2, 0.0, ev.BEGIN),
+        _evt(3, 0.5, ev.EVICT),          # 0.5 s of lost work
+        _evt(4, 0.5, ev.REQUEUE),
+        _evt(5, 1.0, ev.ADMIT, device=1),
+        _evt(6, 1.0, ev.BEGIN, device=1),
+        _evt(7, 3.0, ev.END, device=1),
+    ]
+    (p,) = profiles_from_events(events).values()
+    assert p.evictions == 1 and p.incarnations == 2
+    assert p.devices == [0, 1]
+    assert abs(p.exec_s - 2.5) < 1e-9    # 0.5 lost + 2.0 final
+    assert abs(p.park_s - 0.5) < 1e-9    # requeue -> re-admit
+    assert p.completed
+
+
+def test_profile_join_calibrated_admit_payload_wins():
+    """The calib-gated ADMIT payload carries the ACTUAL (possibly
+    inflated) reservation — it overrides the SUBMIT prediction and flags
+    the profile calibrated; memory violations compare against it."""
+    events = [
+        _evt(0, 0.0, ev.SUBMIT, data={"job": "j", "est_seconds": 1.0,
+                                      "hbm_bytes": 2 * GB}),
+        _evt(1, 0.0, ev.ADMIT, data={"hbm": 3 * GB}),
+        _evt(2, 0.0, ev.BEGIN),
+        _evt(3, 1.0, ev.END, data={"hw": int(2.5 * GB)}),
+    ]
+    (p,) = profiles_from_events(events).values()
+    assert p.calibrated and p.reserved_hbm == 3 * GB
+    assert not p.memory_violation        # 2.5 GB hw <= 3 GB reserved
+    bad = profiles_from_events(events[:1] + [
+        _evt(1, 0.0, ev.ADMIT),          # uncalibrated: reserved = 2 GB
+        _evt(2, 0.0, ev.BEGIN),
+        _evt(3, 1.0, ev.END, data={"hw": int(2.5 * GB)}),
+    ])
+    (q,) = bad.values()
+    assert q.memory_violation
+
+
+def test_device_occupancy_timeline_integrates_residency():
+    """Two tasks of demand 0.5 overlapping on device 0: occupancy steps
+    0.5 -> 1.0 -> 0.5 -> 0, busy the whole window, mean 0.75."""
+    events = [
+        _evt(0, 0.0, ev.SUBMIT, uid=1, name="a",
+             data={"core_demand": 0.5, "bw_demand": 0.1}),
+        _evt(1, 0.0, ev.SUBMIT, uid=2, name="b",
+             data={"core_demand": 0.5, "bw_demand": 0.1}),
+        _evt(2, 0.0, ev.ADMIT, uid=1),
+        _evt(3, 1.0, ev.ADMIT, uid=2),
+        _evt(4, 3.0, ev.END, uid=1),
+        _evt(5, 4.0, ev.END, uid=2),
+    ]
+    occ = device_occupancy(events)
+    a = occ[0]
+    assert abs(a["busy_frac"] - 1.0) < 1e-9
+    # 1s@0.5 + 2s@1.0 + 1s@0.5 over 4s = 0.75
+    assert abs(a["mean_occupancy"] - 0.75) < 1e-9
+    assert a["last"] == 0.0
+    assert [o for _, o in a["timeline"]] == [0.5, 1.0, 0.5, 0.0]
+
+
+# ---------------------------------------------------------------------------
+# sim/live attribution parity
+# ---------------------------------------------------------------------------
+
+def test_sim_live_attribution_parity():
+    """The same submission trace through both backends: identical admission
+    decision streams (obs.replay differ) and structurally identical
+    attribution joins — same tasks, same completion/eviction flags, same
+    incarnation counts. (Times differ: virtual vs wall clock.)"""
+    def run(backend):
+        c = Cluster(MGBAlg3Scheduler(2), workers=4, backend=backend,
+                    trace=True)
+        for i in range(6):
+            c.submit(mk_job(f"j{i}", mem_gb=9.0, est=0.01))
+        c.drain()
+        evs = c.trace.events()
+        profs = Profiler(c.trace).by_name()
+        c.shutdown()
+        return evs, profs
+
+    sim_evs, sim_profs = run("sim")
+    live_evs, live_profs = run("live")
+    div = diff_streams(sim_evs, live_evs, kinds=(ev.ADMIT,))
+    assert div is None, div
+    assert set(sim_profs) == set(live_profs) == {f"j{i}" for i in range(6)}
+    for name in sim_profs:
+        s, l = sim_profs[name], live_profs[name]
+        assert (s.completed, s.evictions, s.incarnations) == \
+               (l.completed, l.evictions, l.incarnations), name
+        assert s.pred_est_s == l.pred_est_s == 0.01
+        assert l.exec_s > 0.0 and s.exec_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# surfaces: accessors, export counters, SLO drift, the dashboard
+# ---------------------------------------------------------------------------
+
+def test_cluster_profile_accessors():
+    c = Cluster(MGBAlg3Scheduler(2), backend="sim", trace=True,
+                calibrate=True)
+    h = c.submit(mk_job("a", est=0.5))
+    c.submit(mk_job("b", est=0.2))
+    c.drain()
+    per_task = h.profile()
+    assert set(per_task) == {"a"}
+    assert per_task["a"].completed and per_task["a"].exec_s > 0
+    summary = c.profile()
+    assert summary["tasks"] == 2 and summary["completed"] == 2
+    assert "calibration" in summary      # calibrate=True rides along
+    assert 0 in summary["device_occupancy"]
+
+
+def test_profile_requires_trace():
+    c = Cluster(MGBAlg3Scheduler(1), backend="sim")
+    h = c.submit(mk_job("a", est=0.1))
+    c.drain()
+    for fn in (c.profile, h.profile):
+        try:
+            fn()
+            raise AssertionError("profile() without trace= must raise")
+        except RuntimeError as e:
+            assert "trace" in str(e)
+
+
+def test_export_profile_counters():
+    """profile_counters=True adds per-device occupancy-% and est-error-%
+    counter tracks; the document stays valid and off-by-default output is
+    unchanged."""
+    c = Cluster(MGBAlg3Scheduler(2), backend="sim", trace=True)
+    for i in range(4):
+        c.submit(mk_job(f"j{i}", mem_gb=9.0, est=0.5))
+    c.drain()
+    evs = c.trace.events()
+    base = to_chrome_trace(evs)
+    doc = to_chrome_trace(evs, profile_counters=True)
+    assert validate_chrome_trace(doc) == []
+    assert to_chrome_trace(evs) == base  # off-path byte-identical
+    names = {r["name"] for r in doc["traceEvents"] if r.get("ph") == "C"}
+    assert "occupancy %" in names and "est error %" in names
+    assert trace_summary(doc)["counter_samples"] > \
+        trace_summary(base)["counter_samples"]
+
+
+def test_slo_drift_alert_edge_triggered():
+    """Persistent misprediction burns the drift window and fires ONE
+    alert; accurate probes never do."""
+    mon = SLOMonitor(window=8, drift_tolerance=0.25, drift_target=0.9)
+    for _ in range(8):
+        mon.note_drift("ok", 1.0, 1.1)       # within tolerance
+    assert mon.alerts == []
+    for _ in range(16):
+        mon.note_drift("bad", 1.0, 2.0)      # 2x off: violation
+    assert len(mon.alerts) == 1              # edge-triggered
+    assert mon.alerts[0].stream == "drift"
+    assert "drift" in mon.status()
+    assert not mon.status()["drift"]["healthy"]
+
+
+def test_slo_for_calibration_subscribes_to_store():
+    store = CalibrationStore()
+    mon = SLOMonitor.for_calibration(store, window=4, drift_target=0.5)
+    vec = mk_vec(est=1.0)
+    for _ in range(8):
+        feed_end(store, vec, observed_s=2.0, hw_gb=1.0)
+    assert len(mon.alerts) == 1
+    assert mon.alerts[0].stream == "drift"
+
+
+def test_top_renders_occupancy_bars_and_calib_rows():
+    """A traced + calibrated scheduler renders observed-occupancy device
+    bars and per-class accuracy rows; the demo frame still works."""
+    store = CalibrationStore(min_samples=1)
+    c = Cluster(MGBAlg3Scheduler(2), backend="sim", trace=True,
+                calibrate=store)
+    for row in drifting_mix(1, n_jobs=16):
+        c.run_until(row["t"])
+        c.submit(row["job"])
+    c.drain()
+    frame = top.render(c.sched, stats=c.stats())
+    assert " occ " in frame              # observed-occupancy bar suffix
+    assert "calib" in frame and "mae raw" in frame
+    bare = top.render(MGBAlg3Scheduler(2))
+    assert " occ " not in bare and "calib" not in bare
+    assert isinstance(top._demo(), str)
+
+
+def test_calibrated_scheduler_wrapper_is_drop_in():
+    """CalibratedScheduler(sched) composes with Cluster: hooks land on the
+    inner scheduler, the store is discovered (not double-attached), and
+    attribute traffic forwards."""
+    sched = CalibratedScheduler(MGBAlg3Scheduler(2), min_samples=1,
+                                fold_batch=1)
+    c = Cluster(sched, backend="sim", trace=True)
+    assert c.calibration is sched.store
+    for row in drifting_mix(2, n_jobs=12):
+        c.run_until(row["t"])
+        c.submit(row["job"])
+    c.drain()
+    assert sched.store.observations == 12
+    assert sched.store.corrections > 0
+    assert sched.waiting_count() == 0    # forwarded read
+
+
+def test_attach_calibrator_fans_out_to_shards():
+    from repro.core.scheduler import ShardedScheduler
+    sched = ShardedScheduler(pods=2, rows=2, cols=2)
+    store = attach_calibrator(sched)
+    assert sched._calib is store
+    assert all(sh._calib is store for sh in sched.shards)
